@@ -1,0 +1,56 @@
+"""Fig. 3/4: HAC over the 14 LUBM queries + clustering-path microbenches."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import hac
+from repro.core.features import FeatureSpace
+from repro.graph import lubm
+from repro.kernels.jaccard import ops as jops
+
+
+def _time(fn, n=5):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else out
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    ds = lubm.load(1, 0)
+    space = FeatureSpace(ds.store,
+                         type_predicate=ds.dictionary.lookup("rdf:type"))
+    base = ds.base_workload()
+    space.track_workload(base)
+    bitmaps = space.workload_bitmaps(base)
+    dist = np.asarray(jops.jaccard_distance(bitmaps))
+    z = hac.hac_numpy(dist, "single")   # the paper's Fig.-3 dendrogram run
+    labels = hac.cut(z, 0.75)
+
+    rows = [
+        ("fig3/hac_14queries_us", _time(
+            lambda: hac.hac_numpy(dist, "single")),
+         f"clusters@0.75={labels.max() + 1}"),
+        ("fig3/jaccard_14x14_us", _time(
+            lambda: jops.jaccard_distance(bitmaps, use_kernel=False)), ""),
+    ]
+    # larger clustering loads (the adaptation-path hot spot)
+    rng = np.random.default_rng(0)
+    for n in (128, 512):
+        bm = rng.integers(0, 2 ** 32, size=(n, 32), dtype=np.uint32)
+        rows.append((f"jaccard/{n}x{n}_jnp_us", _time(
+            lambda bm=bm: jops.jaccard_distance(bm, use_kernel=False)), ""))
+        d = np.asarray(jops.jaccard_distance(bm, use_kernel=False))
+        rows.append((f"hac/{n}_numpy_us", _time(
+            lambda d=d: hac.hac_numpy(d, "single"), n=2), ""))
+        rows.append((f"hac/{n}_jax_us", _time(
+            lambda d=d: hac.hac_jax(d.astype(np.float32), "single"), n=2),
+            ""))
+    return rows

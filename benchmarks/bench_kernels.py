@@ -1,0 +1,80 @@
+"""Kernel microbenches.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+per-op), so wall-times compare the *reference jnp paths* (which XLA:CPU
+compiles) and validate kernels at small shapes; the kernels' TPU performance
+story is carried by the roofline analysis, not CPU timings.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.jaccard import kernel as jkernel
+from repro.kernels.jaccard import ref as jref
+from repro.kernels.mamba2_ssd import kernel as skernel
+from repro.kernels.mamba2_ssd import ref as sref
+from repro.kernels.rwkv6_wkv import kernel as wkernel
+from repro.kernels.rwkv6_wkv import ref as wref
+
+
+def _time(fn, n=3):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # jaccard: jnp oracle vs pallas-interpret (correctness-checked timing)
+    bm = jnp.asarray(rng.integers(0, 2 ** 32, (256, 32), dtype=np.uint32))
+    f_ref = jax.jit(lambda a: jref.jaccard_distance(a, a))
+    rows.append(("kern/jaccard256_jnp_us", _time(lambda: f_ref(bm)), ""))
+    rows.append(("kern/jaccard256_pallas_interp_us", _time(
+        lambda: jkernel.jaccard_distance_pallas(bm, bm, interpret=True),
+        n=1), "interpret-mode"))
+
+    # flash attention reference path (jit) at a prefill-ish tile
+    q = jnp.asarray(rng.normal(size=(1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    f_attn = jax.jit(lambda q, k, v: fref.attention(q, k, v, causal=True))
+    rows.append(("kern/attn512_gqa_jnp_us", _time(lambda: f_attn(q, k, v)),
+                 "b1_s512_h8_kv2_d64"))
+
+    # wkv: scan vs chunked kernel (interpret) at small shape
+    b, s, h, hd = 1, 128, 2, 32
+    r = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(b, s, h, hd)) - 2)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, hd)), jnp.float32)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    f_wkv = jax.jit(lambda *a: wref.wkv(*a))
+    rows.append(("kern/wkv128_scan_us", _time(
+        lambda: f_wkv(r, kk, vv, w, u, s0)), ""))
+
+    # ssd: scan vs chunked kernel at small shape
+    x = jnp.asarray(rng.normal(size=(1, 256, 2, 32)), jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(1, 256, 16)), jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(1, 256, 16)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(1, 256, 2))) * 0.1 + 1e-3,
+                     jnp.float32)
+    a = jnp.asarray([-1.0, -2.0], jnp.float32)
+    d = jnp.asarray([1.0, 1.0], jnp.float32)
+    ss0 = jnp.zeros((1, 2, 16, 32), jnp.float32)
+    f_ssd = jax.jit(lambda: sref.ssd(x[:, :, 0], bmat, cmat, dt[:, :, 0],
+                                     a[0], d[0], ss0[:, 0]))
+    rows.append(("kern/ssd256_scan_us", _time(f_ssd), "per-head"))
+    return rows

@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``results/dryrun2/*.json`` (falling back to ``results/dryrun``) and
+emits one row per (arch × shape × mesh) with the three roofline terms and the
+dominant bottleneck; also writes ``results/roofline.csv``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+from typing import List, Tuple
+
+RESULTS = Path(os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun3"))
+FALLBACKS = [Path("results/dryrun2"), Path("results/dryrun")]
+
+
+def load_records():
+    d = RESULTS
+    for fb in FALLBACKS:
+        if d.exists():
+            break
+        d = fb
+    recs = []
+    for f in sorted(glob.glob(str(d / "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:  # noqa: BLE001
+            pass
+    return recs
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    csv_lines = ["arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+                 "dominant,useful_flops_ratio,roofline_fraction"]
+    for rec in load_records():
+        name = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("skipped"):
+            rows.append((f"roofline/{name}", 0.0,
+                         "SKIP:" + rec["reason"][:50].replace(",", ";")))
+            csv_lines.append(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                             f",,,skip,,")
+            continue
+        if "error" in rec:
+            rows.append((f"roofline/{name}", 0.0, "ERROR"))
+            continue
+        r = rec["roofline"]
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append((
+            f"roofline/{name}", bound * 1e6,
+            f"dom={r['dominant']}_frac={r['roofline_fraction']:.3f}"
+            f"_useful={r['useful_flops_ratio']:.2f}"))
+        csv_lines.append(
+            f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"{r['t_compute'] * 1e3:.3f},{r['t_memory'] * 1e3:.3f},"
+            f"{r['t_collective'] * 1e3:.3f},{r['dominant']},"
+            f"{r['useful_flops_ratio']:.3f},{r['roofline_fraction']:.4f}")
+    out = Path("results/roofline.csv")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("\n".join(csv_lines) + "\n")
+    return rows

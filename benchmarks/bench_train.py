@@ -1,0 +1,35 @@
+"""Training-loop throughput on CPU (reduced configs): tokens/sec + loss slope."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import build
+from repro.data.pipeline import Prefetcher
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for arch in ("smollm-360m", "olmoe-1b-7b", "rwkv6-3b"):
+        cfg, mesh, ctx, params, opt_state, stream, step_fn = build(
+            arch, reduced=True, batch=4, seq=64, steps=30)
+        pf = Prefetcher(stream)
+        losses = []
+        t0 = None
+        for i in range(12):
+            _, batch_np = next(pf)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+            if i == 1:
+                t0 = time.perf_counter()   # skip compile step
+        pf.close()
+        dt = (time.perf_counter() - t0) / 10
+        toks = 4 * 64
+        rows.append((f"train/{arch}_step_us", dt * 1e6,
+                     f"tok/s={toks / dt:.0f}_loss_{losses[0]:.2f}->"
+                     f"{losses[-1]:.2f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only exp1,roofline]
+  REPRO_BENCH_SCALE=3 ... python -m benchmarks.run     (faster KG benches)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("clustering", "exp1", "exp2", "moe_placement", "kernels", "train",
+           "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in BENCHES:
+        if bench not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.bench_{bench}",
+                             fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+            print(f"_meta/{bench}_wall_s,{(time.time() - t0) * 1e6:.0f},",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"_meta/{bench}_FAILED,0,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

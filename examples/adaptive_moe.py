@@ -1,0 +1,65 @@
+"""AWAPart in the LM framework: workload-aware MoE expert placement.
+
+Routes a drifting request workload through an MoE layer, observes expert
+co-activation, and migrates experts between expert-parallel ranks exactly the
+way the paper migrates triples between shards — cutting all-to-all dispatch
+bytes (the "distributed joins" of a TPU pod).
+
+    PYTHONPATH=src python examples/adaptive_moe.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import placement
+from repro.models import moe
+
+E, RANKS, TOPK = 64, 16, 8   # olmoe-1b-7b geometry
+cfg = ArchConfig(arch_id="olmoe-demo", family="moe", n_layers=1, d_model=64,
+                 n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+                 n_experts=E, top_k=TOPK, moe_dispatch="rank",
+                 param_dtype="float32", compute_dtype="float32")
+params, _ = moe.moe_init(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+
+# a workload with topical structure: each request activates experts from one
+# of 8 latent topics (plus noise) — the LM analogue of query feature sets
+topics = rng.permutation(E).reshape(8, 8)
+def sample_routing(n_requests, noise=0.1):
+    out = np.empty((n_requests, TOPK), np.int64)
+    for i in range(n_requests):
+        t = topics[rng.integers(8)]
+        picks = list(rng.permutation(t)[:TOPK])
+        for j in range(TOPK):
+            if rng.random() < noise:
+                picks[j] = int(rng.integers(E))
+        out[i] = picks
+    return out
+
+expert_to_rank = np.repeat(np.arange(RANKS), E // RANKS).astype(np.int32)
+print("serving with identity placement...")
+for round_i in range(3):
+    routing = sample_routing(1024)
+    before = placement.avg_distinct_ranks(routing, expert_to_rank, RANKS)
+    new_map, report = placement.plan_expert_placement(
+        routing, E, RANKS, old_expert_to_rank=expert_to_rank,
+        expert_bytes=3 * cfg.d_model * cfg.d_ff * 4)
+    if report.accepted:
+        params = placement.apply_expert_placement(params, new_map)
+        expert_to_rank = new_map
+    print(f"round {round_i}: ranks/token {report.ranks_before:.2f} -> "
+          f"{report.ranks_after:.2f} "
+          f"(all-to-all bytes {report.bytes_saved_frac*100:+.0f}%), "
+          f"migrated {report.moved_experts} experts "
+          f"({report.migration_bytes/1e6:.1f} MB), "
+          f"accepted={report.accepted}")
+
+# the placed model computes the identical function (single-copy migration,
+# like triple swaps): verify against a fresh un-permuted reference
+ref_params, _ = moe.moe_init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+y_ref, _ = moe.moe_apply_dense(ref_params, x, cfg)
+y_new, _ = moe.moe_apply_dense(params, x, cfg)
+print(f"\nfunction preserved after migrations: "
+      f"max diff = {float(jnp.abs(y_ref - y_new).max()):.2e}")

@@ -1,0 +1,15 @@
+"""Train a reduced LM for a few hundred steps with the full production stack:
+prefetching data pipeline, AdamW+cosine, async checkpointing, failure
+recovery, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-360m --steps 200
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--reduced", "--steps", "200", "--batch", "8",
+                "--seq", "128", "--ckpt-every", "50",
+                "--inject-failure-at", "120"] + sys.argv[1:]
+    train.main()

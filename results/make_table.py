@@ -1,0 +1,40 @@
+"""Render the §Roofline markdown table from dry-run JSONs.
+
+  python results/make_table.py results/dryrun3 [--md]
+"""
+import glob
+import json
+import sys
+
+d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun3"
+md = "--md" in sys.argv
+rows = []
+for f in sorted(glob.glob(f"{d}/*.json")):
+    rec = json.load(open(f))
+    if rec.get("skipped") or "error" in rec:
+        continue
+    r = rec["roofline"]
+    rows.append((rec["arch"], rec["shape"], rec["mesh"],
+                 r["t_compute"], r["t_memory"], r["t_collective"],
+                 r["dominant"], r["useful_flops_ratio"],
+                 r["roofline_fraction"]))
+
+
+def fmt(t):
+    if t >= 1:
+        return f"{t:.2f} s"
+    if t >= 1e-3:
+        return f"{t * 1e3:.1f} ms"
+    return f"{t * 1e6:.0f} us"
+
+
+if md:
+    print("| arch | shape | mesh | t_comp | t_mem | t_coll | dominant | useful | fraction |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a, s, m, c, me, x, dom, u, fr in sorted(rows):
+        print(f"| {a} | {s} | {m} | {fmt(c)} | {fmt(me)} | {fmt(x)} | "
+              f"{dom} | {u:.2f} | {fr:.3f} |")
+else:
+    for a, s, m, c, me, x, dom, u, fr in sorted(rows):
+        print(f"{a:18s} {s:12s} {m:6s} c={fmt(c):>9s} m={fmt(me):>9s} "
+              f"x={fmt(x):>9s} {dom[:4]:5s} u={u:5.2f} f={fr:.3f}")

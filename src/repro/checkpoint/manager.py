@@ -1,0 +1,131 @@
+"""Sharded checkpointing with async save and reshard-on-restore.
+
+Design (tensorstore-free, multi-host-shaped):
+  * every pytree leaf is saved as ``<flat-key>.npy`` under
+    ``<dir>/step_<N>.tmp/`` then the directory is atomically renamed —
+    a crash mid-save never corrupts the latest checkpoint;
+  * on multi-host pods each process would write only its addressable shards
+    (key suffixed by shard index); on this single-process container the
+    fully-replicated gather path is exercised, the layout is identical;
+  * restore takes an optional sharding tree and ``device_put``s each leaf to
+    it — restoring onto a *different* mesh (elastic re-size) is therefore the
+    same code path as normal restore;
+  * ``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+    writes to disk on a background thread, overlapping I/O with the next
+    training steps — the standard large-run pattern.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten(tree) -> Tuple[Dict[str, Any], Any]:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree, *,
+         keep_last: Optional[int] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, _ = _flatten(tree)
+    manifest = {}
+    for key, leaf in flat.items():
+        if leaf is None:
+            manifest[key] = None
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"{key}.npy", arr)
+        manifest[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    if keep_last:
+        steps = sorted(available_steps(ckpt_dir))
+        for s in steps[:-keep_last]:
+            shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+    return final
+
+
+def available_steps(ckpt_dir: str | Path) -> List[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                  if not p.name.endswith(".tmp"))
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, target_tree, *,
+            shardings=None):
+    """Restore into the structure of ``target_tree``. With ``shardings`` the
+    leaves are placed onto the (possibly different) mesh — elastic restore."""
+    path = Path(ckpt_dir) / f"step_{step}"
+    flat_t, treedef = _flatten(target_tree)
+    flat_s = None
+    if shardings is not None:
+        flat_s, _ = _flatten(shardings)
+    out = {}
+    for key, target in flat_t.items():
+        if target is None:
+            out[key] = None
+            continue
+        arr = np.load(path / f"{key}.npy")
+        if flat_s is not None and flat_s.get(key) is not None:
+            out[key] = jax.device_put(arr, flat_s[key])
+        else:
+            out[key] = jax.numpy.asarray(arr)
+    leaves = [out[k] for k in flat_t]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, persist on a background thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep_last: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.saved_steps: List[int] = []
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        host_tree = jax.tree.map(
+            lambda x: None if x is None else np.asarray(jax.device_get(x)),
+            tree, is_leaf=lambda x: x is None)
+
+        def _write():
+            save(self.ckpt_dir, step, host_tree, keep_last=self.keep_last)
+            self.saved_steps.append(step)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

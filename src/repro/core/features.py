@@ -1,0 +1,167 @@
+"""Query & triple feature extraction — the paper's QueryAnalyzer (Sec. III.A).
+
+Features identifying triples (and clustering queries):
+  * ``P``  — all triples sharing predicate P,
+  * ``PO`` — all triples sharing predicate P *and* object O.
+
+Join-structure features (``SSJ``/``OOJ``/``OSJ``) are extracted per query and
+feed the Fig.-5 scoring statistics, not the Jaccard bitmaps (per Fig. 1, the
+Jaccard sets contain only P and PO features).
+
+Every triple has exactly one *owner* feature — its PO feature if that (p, o)
+pair is tracked, else its P feature. The partition maps owner features to
+shards, so a feature's triples live in exactly one shard (no replication —
+Sec. III.B). Tracked PO pairs are all ``rdf:type`` pairs plus any (p, o) pair
+appearing as a constant-object pattern in the observed workload; tracking a
+new PO feature *splits* it out of its parent P feature (adaptive granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.triples import TripleStore
+from repro.query.pattern import Query, is_var
+
+FeatureKey = Tuple  # ("P", p) | ("PO", p, o)
+
+
+class FeatureSpace:
+    """Dense indexing of the feature universe over a dataset + workload."""
+
+    def __init__(self, store: TripleStore, type_predicate: int | None = None):
+        self.store = store
+        self.type_predicate = type_predicate
+        self._keys: List[FeatureKey] = []
+        self._index: Dict[FeatureKey, int] = {}
+        self._tracked_po: Dict[int, int] = {}   # packed (p, o) -> feature idx
+        preds = np.unique(store.triples[:, 1])
+        for p in preds.tolist():
+            self._add(("P", int(p)))
+        if type_predicate is not None:
+            t = store.triples
+            mask = t[:, 1] == type_predicate
+            for o in np.unique(t[mask, 2]).tolist():
+                self.track_po(type_predicate, int(o))
+
+    # ------------------------------------------------------------------ #
+    def _add(self, key: FeatureKey) -> int:
+        idx = self._index.get(key)
+        if idx is None:
+            idx = len(self._keys)
+            self._keys.append(key)
+            self._index[key] = idx
+        return idx
+
+    @staticmethod
+    def _pack(p: int, o: int) -> int:
+        return (int(p) << 32) | int(o)
+
+    def track_po(self, p: int, o: int) -> int:
+        idx = self._add(("PO", int(p), int(o)))
+        self._tracked_po[self._pack(p, o)] = idx
+        return idx
+
+    def track_workload(self, queries: Iterable[Query]) -> List[int]:
+        """Track every constant-object (p, o) pattern in the workload."""
+        added = []
+        for q in queries:
+            for s, p, o in q.patterns:
+                if not is_var(p) and not is_var(o):
+                    added.append(self.track_po(p, o))
+        return added
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_features(self) -> int:
+        return len(self._keys)
+
+    def key(self, idx: int) -> FeatureKey:
+        return self._keys[idx]
+
+    def p_index(self, p: int) -> int:
+        return self._index[("P", int(p))]
+
+    def po_index(self, p: int, o: int) -> int | None:
+        return self._tracked_po.get(self._pack(p, o))
+
+    # ------------------------------------------------------------------ #
+    def query_features(self, q: Query, *, fine: bool = True) -> np.ndarray:
+        """The query's P/PO feature set as sorted unique indices.
+
+        ``fine=False`` is the Fig.-1 clustering granularity: PO features only
+        for ``rdf:type`` patterns, plain P otherwise (Q2 there counts its
+        constant-object ``subOrganizationOf`` as a P feature). ``fine=True``
+        is the ownership/scoring granularity: any tracked (p, o) pair."""
+        feats = set()
+        for s, p, o in q.patterns:
+            if is_var(p):
+                continue
+            if not is_var(o) and (fine or p == self.type_predicate):
+                po = self.po_index(p, o)
+                feats.add(po if po is not None else self.p_index(p))
+            else:
+                feats.add(self.p_index(p))
+        return np.array(sorted(feats), dtype=np.int32)
+
+    def workload_bitmaps(self, queries: Sequence[Query],
+                         n_features: int | None = None) -> np.ndarray:
+        """Packed uint32 bitmaps, one row per query (input to Jaccard)."""
+        nf = n_features or self.n_features
+        n_words = (nf + 31) // 32
+        out = np.zeros((len(queries), n_words), dtype=np.uint32)
+        # |= with duplicate word indices needs np.bitwise_or.at
+        for i, q in enumerate(queries):
+            f = self.query_features(q, fine=False)   # Fig.-1 granularity
+            np.bitwise_or.at(out[i], f // 32,
+                             (np.uint32(1) << (f % 32).astype(np.uint32)))
+        return out
+
+    # ------------------------------------------------------------------ #
+    def triple_owners(self) -> np.ndarray:
+        """Owner feature index per triple, (N,) int32. Vectorized re-keying."""
+        t = self.store.triples
+        p = t[:, 1].astype(np.int64)
+        o = t[:, 2].astype(np.int64)
+        owner = np.empty(t.shape[0], dtype=np.int32)
+        for pi in np.unique(p).tolist():
+            owner[p == pi] = self._index[("P", int(pi))]
+        if self._tracked_po:
+            packed = (p << 32) | o
+            keys = np.array(sorted(self._tracked_po.keys()), dtype=np.int64)
+            vals = np.array([self._tracked_po[k] for k in keys.tolist()],
+                            dtype=np.int32)
+            pos = np.searchsorted(keys, packed)
+            pos = np.clip(pos, 0, len(keys) - 1)
+            hit = keys[pos] == packed
+            owner[hit] = vals[pos[hit]]
+        return owner
+
+    def feature_sizes(self, owners: np.ndarray | None = None) -> np.ndarray:
+        owners = self.triple_owners() if owners is None else owners
+        return np.bincount(owners, minlength=self.n_features).astype(np.int64)
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Per-query join structure used by the Fig.-5 scoring statistics."""
+    features: np.ndarray          # P/PO feature idx per pattern (len = #patterns)
+    join_edges: List[Tuple[int, int, str]]   # (pat_i, pat_j, SSJ|OOJ|OSJ)
+
+
+def query_stats(q: Query, space: FeatureSpace) -> QueryStats:
+    from repro.query.pattern import join_structure
+    feats = []
+    for s, p, o in q.patterns:
+        if is_var(p):
+            feats.append(-1)
+            continue
+        if not is_var(o):
+            po = space.po_index(p, o)
+            feats.append(po if po is not None else space.p_index(p))
+        else:
+            feats.append(space.p_index(p))
+    return QueryStats(features=np.array(feats, dtype=np.int32),
+                      join_edges=join_structure(q))

@@ -1,0 +1,61 @@
+"""Triple-migration planning between shard layouts (Sec. III.B / IV).
+
+Only triples of *re-assigned* features move — the incremental adjustment that
+distinguishes AWAPart from full re-partitioning. A plan lists
+(feature, src, dst) moves plus the migration traffic they imply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.partition import PartitionState
+
+TRIPLE_BYTES = 12  # dictionary-encoded (s, p, o) int32
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    moves: List[Tuple[int, int, int]]        # (feature, src_shard, dst_shard)
+    n_triples: int
+    bytes: int
+
+    @property
+    def n_moves(self) -> int:
+        return len(self.moves)
+
+    def summary(self) -> str:
+        return (f"{self.n_moves} feature moves, {self.n_triples} triples, "
+                f"{self.bytes / 1e6:.2f} MB migration traffic")
+
+
+def plan(old: PartitionState, new: PartitionState) -> MigrationPlan:
+    assert len(old.feature_to_shard) == len(new.feature_to_shard), \
+        "extend the old state before planning (new tracked PO features)"
+    changed = np.where(old.feature_to_shard != new.feature_to_shard)[0]
+    moves = [(int(f), int(old.feature_to_shard[f]), int(new.feature_to_shard[f]))
+             for f in changed.tolist()]
+    n_triples = int(new.feature_sizes[changed].sum())
+    return MigrationPlan(moves=moves, n_triples=n_triples,
+                         bytes=n_triples * TRIPLE_BYTES)
+
+
+def extend_state(state: PartitionState, new_sizes: np.ndarray,
+                 parent_of_new: List[int]) -> PartitionState:
+    """Grow a state with newly-tracked PO features.
+
+    A new PO feature's triples already live on its parent P feature's shard
+    (tracking splits ownership without moving data), so it inherits that
+    shard; the parent's size shrinks accordingly — handled by passing the
+    re-computed ``new_sizes`` for the full (grown) feature universe.
+    """
+    f_old = len(state.feature_to_shard)
+    f_new = len(new_sizes)
+    assert f_new >= f_old and len(parent_of_new) == f_new - f_old
+    f2s = np.empty(f_new, dtype=np.int32)
+    f2s[:f_old] = state.feature_to_shard
+    for i, parent in enumerate(parent_of_new):
+        f2s[f_old + i] = state.feature_to_shard[parent]
+    return PartitionState(f2s, np.asarray(new_sizes, np.int64), state.n_shards)

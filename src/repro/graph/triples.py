@@ -1,0 +1,128 @@
+"""Dictionary-encoded RDF triple store.
+
+The paper stores triples in Virtuoso instances; the TPU-native analogue is a
+dictionary-encoded ``int32 (N, 3)`` array with sorted permutation indexes
+(SPO / POS / OSP), so any triple pattern resolves to a contiguous index range
+via binary search — the same role Lucene plays for AWAPart's initial
+partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+S, P, O = 0, 1, 2
+
+
+class Dictionary:
+    """Bidirectional term <-> id mapping (RDF dictionary encoding)."""
+
+    def __init__(self) -> None:
+        self._term_to_id: Dict[str, int] = {}
+        self._id_to_term: List[str] = []
+
+    def encode(self, term: str) -> int:
+        tid = self._term_to_id.get(term)
+        if tid is None:
+            tid = len(self._id_to_term)
+            self._term_to_id[term] = tid
+            self._id_to_term.append(term)
+        return tid
+
+    def lookup(self, term: str) -> Optional[int]:
+        return self._term_to_id.get(term)
+
+    def decode(self, tid: int) -> str:
+        return self._id_to_term[tid]
+
+    def __len__(self) -> int:
+        return len(self._id_to_term)
+
+
+def _sort_index(triples: np.ndarray, order: Tuple[int, int, int]) -> np.ndarray:
+    """Permutation sorting ``triples`` lexicographically by the given column order."""
+    # np.lexsort keys: last key is primary.
+    keys = tuple(triples[:, c] for c in reversed(order))
+    return np.lexsort(keys).astype(np.int64)
+
+
+@dataclasses.dataclass
+class TripleStore:
+    """Immutable dictionary-encoded triple set with SPO/POS/OSP indexes."""
+
+    triples: np.ndarray                 # (N, 3) int32
+    dictionary: Dictionary
+    spo: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    pos: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+    osp: np.ndarray = dataclasses.field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        assert self.triples.ndim == 2 and self.triples.shape[1] == 3
+        self.triples = np.ascontiguousarray(self.triples, dtype=np.int32)
+        if self.spo is None:
+            self.spo = _sort_index(self.triples, (S, P, O))
+        if self.pos is None:
+            self.pos = _sort_index(self.triples, (P, O, S))
+        if self.osp is None:
+            self.osp = _sort_index(self.triples, (O, S, P))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_triples(self) -> int:
+        return int(self.triples.shape[0])
+
+    def _range(self, index: np.ndarray, cols: Sequence[int],
+               vals: Sequence[int]) -> Tuple[int, int]:
+        """[lo, hi) range in ``index`` where triples match vals on prefix cols."""
+        view = self.triples[index][:, list(cols)]
+        lo = hi = 0
+        n = view.shape[0]
+        lo_key = np.array(vals, dtype=np.int64)
+        # successive binary searches on each prefix column
+        lo, hi = 0, n
+        for j, v in enumerate(vals):
+            col = view[lo:hi, j]
+            lo2 = lo + int(np.searchsorted(col, v, side="left"))
+            hi2 = lo + int(np.searchsorted(col, v, side="right"))
+            lo, hi = lo2, hi2
+            if lo >= hi:
+                return lo, lo
+        return lo, hi
+
+    def match(self, s: Optional[int], p: Optional[int],
+              o: Optional[int]) -> np.ndarray:
+        """Return (M, 3) triples matching the pattern; None = wildcard."""
+        t = self.triples
+        if s is not None and p is None and o is None:
+            lo, hi = self._range(self.spo, (S,), (s,))
+            return t[self.spo[lo:hi]]
+        if s is not None and p is not None and o is None:
+            lo, hi = self._range(self.spo, (S, P), (s, p))
+            return t[self.spo[lo:hi]]
+        if s is not None and p is not None and o is not None:
+            lo, hi = self._range(self.spo, (S, P, O), (s, p, o))
+            return t[self.spo[lo:hi]]
+        if p is not None and o is None and s is None:
+            lo, hi = self._range(self.pos, (P,), (p,))
+            return t[self.pos[lo:hi]]
+        if p is not None and o is not None and s is None:
+            lo, hi = self._range(self.pos, (P, O), (p, o))
+            return t[self.pos[lo:hi]]
+        if o is not None and s is None and p is None:
+            lo, hi = self._range(self.osp, (O,), (o,))
+            return t[self.osp[lo:hi]]
+        if o is not None and s is not None and p is None:
+            lo, hi = self._range(self.osp, (O, S), (o, s))
+            return t[self.osp[lo:hi]]
+        return t  # fully unbound
+
+    def count(self, s: Optional[int], p: Optional[int], o: Optional[int]) -> int:
+        return int(self.match(s, p, o).shape[0])
+
+
+def build_store(triples: np.ndarray, dictionary: Dictionary) -> TripleStore:
+    # drop duplicate triples (materialization can produce them)
+    uniq = np.unique(triples, axis=0)
+    return TripleStore(triples=uniq, dictionary=dictionary)

@@ -1,0 +1,114 @@
+"""Public flash-attention op: Pallas forward + chunked flash-style backward.
+
+The backward pass recomputes attention per query chunk (never materializing
+the full (S, T) matrix for more than one chunk) using the standard flash
+gradient identities:
+
+    D  = rowsum(dO ∘ O)
+    dS = P ∘ (dP − D),  dP = dO Vᵀ
+    dQ = dS K·scale,  dK = dSᵀ Q·scale,  dV = Pᵀ dO
+
+It is pure jnp (XLA fuses it well on TPU); the forward is the Pallas kernel
+(compiled on TPU, ``interpret=True`` on this CPU container). This is a
+deliberate engineering choice documented in DESIGN.md — fwd owns the memory
+win (no S×T materialization at 32k prefill), bwd chunking bounds the train
+peak the same way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, q_offset, kv_valid_len, interpret):
+    return kernel.flash_attention_fwd(
+        q, k, v, causal=causal, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, q_offset, kv_valid_len, interpret):
+    o = kernel.flash_attention_fwd(
+        q, k, v, causal=causal, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, interpret=interpret)
+    return o, (q, k, v, o)
+
+
+def _bwd(causal, q_offset, kv_valid_len, interpret, res, do):
+    q, k, v, o = res
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / np.sqrt(d)
+    chunk = min(128, s)
+    sp = (s + chunk - 1) // chunk * chunk
+    pad = sp - s
+
+    qf = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    dof = jnp.pad(do, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    of = jnp.pad(o, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    d_row = (dof * of).sum(-1)                         # (B, SP, H)
+
+    kpos = jnp.arange(t)[None, :]
+
+    def q_chunk(carry, idx):
+        dk_acc, dv_acc = carry
+        lo = idx * chunk
+        qc = jax.lax.dynamic_slice_in_dim(qf, lo, chunk, 1)
+        doc = jax.lax.dynamic_slice_in_dim(dof, lo, chunk, 1)
+        drc = jax.lax.dynamic_slice_in_dim(d_row, lo, chunk, 1)
+        qg = qc.reshape(b, chunk, kh, g, d)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * scale
+        qpos = lo + jnp.arange(chunk)[:, None] + q_offset
+        ok = jnp.ones((chunk, t), bool)
+        if causal:
+            ok = qpos >= kpos
+        if kv_valid_len is not None:
+            ok = jnp.logical_and(ok, kpos < kv_valid_len)
+        # rows past the real sequence end are fully masked; guard softmax
+        logits = jnp.where(ok[None, None, None], logits, -1e30)
+        mx = logits.max(-1, keepdims=True)
+        p = jnp.exp(logits - mx)
+        p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+        dog = doc.reshape(b, chunk, kh, g, d)
+        dp = jnp.einsum("bskgd,btkd->bkgst", dog, vf)
+        drg = drc.reshape(b, chunk, kh, g).transpose(0, 2, 3, 1)
+        ds = p * (dp - drg[..., None])
+        dq_c = jnp.einsum("bkgst,btkd->bskgd", ds, kf).reshape(
+            b, chunk, h, d) * scale
+        dk_acc = dk_acc + jnp.einsum("bkgst,bskgd->btkd", ds, qg) * scale
+        dv_acc = dv_acc + jnp.einsum("bkgst,bskgd->btkd", p, dog)
+        return (dk_acc, dv_acc), dq_c
+
+    zeros_kv = jnp.zeros((b, t, kh, d), jnp.float32)
+    (dk, dv), dq_chunks = jax.lax.scan(
+        q_chunk, (zeros_kv, zeros_kv), jnp.arange(sp // chunk))
+    dq = jnp.moveaxis(dq_chunks, 0, 1).reshape(b, sp, h, d)[:, :s]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    kv_valid_len: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """Differentiable flash attention. q: (B,S,H,D); k/v: (B,T,K,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if isinstance(q_offset, jnp.ndarray):
+        q_offset = int(q_offset)           # static for kernel specialization
+    return _flash(q, k, v, causal, q_offset, kv_valid_len, interpret)

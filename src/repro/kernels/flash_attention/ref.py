@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for GQA flash attention (incl. cache masking)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, q_offset: int = 0,
+              kv_valid_len: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, S, H, D); k/v: (B, T, K, D) with H % K == 0. f32 softmax.
+
+    ``q_offset`` shifts query positions (decode against a cache);
+    ``kv_valid_len`` masks cache slots >= that length."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        ok = qpos >= kpos
+    if kv_valid_len is not None:
+        ok = jnp.logical_and(ok, (kpos < kv_valid_len))
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)

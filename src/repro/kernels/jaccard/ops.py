@@ -1,0 +1,31 @@
+"""Public op: Jaccard distance matrix with kernel/ref dispatch.
+
+On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
+``interpret=True`` mode, and small problems fall back to the jnp oracle
+(same math, no tiling overhead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.jaccard import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def jaccard_distance(bitmaps: jnp.ndarray | np.ndarray,
+                     *, use_kernel: bool | None = None,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Symmetric (Q, Q) Jaccard distance matrix from packed uint32 bitmaps."""
+    a = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    if use_kernel is None:
+        use_kernel = _on_tpu() or a.shape[0] >= 256
+    if not use_kernel:
+        return ref.jaccard_distance(a, a)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return kernel.jaccard_distance_pallas(a, a, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the packed-bitmap Jaccard distance matrix."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def popcount(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount on uint32 words (same math the kernel uses)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def jaccard_distance(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """1 - |A∩B| / |A∪B| for packed uint32 bitmaps.
+
+    a: (Q, W), b: (K, W) -> (Q, K) float32. Two empty sets are identical
+    (J_sim = 1, distance 0), matching the paper's Fig.-1 convention.
+    """
+    inter = popcount(a[:, None, :] & b[None, :, :]).sum(-1)
+    union = popcount(a[:, None, :] | b[None, :, :]).sum(-1)
+    sim = jnp.where(union > 0, inter / jnp.maximum(union, 1), 1.0)
+    return (1.0 - sim).astype(jnp.float32)

@@ -1,0 +1,31 @@
+"""Public SSD op: Pallas chunked kernel with per-head jnp-scan oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(x, b, c, dt, a, d, s0, *, use_kernel: bool | None = None,
+        interpret: bool | None = None, chunk: int = 128):
+    """Multi-head chunked SSD; shapes as in :func:`kernel.ssd_pallas`."""
+    if use_kernel is None:
+        use_kernel = _on_tpu() or x.shape[1] >= chunk
+    if not use_kernel:
+        bb, s, h, hd = x.shape
+        ys, fs = [], []
+        for hi in range(h):
+            y, f = ref.ssd(x[:, :, hi], b, c, dt[:, :, hi],
+                           a[hi], d[hi], s0[:, hi])
+            ys.append(y)
+            fs.append(f)
+        return jnp.stack(ys, 2), jnp.stack(fs, 1)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return kernel.ssd_pallas(x, b, c, dt, a, d, s0, chunk=chunk,
+                             interpret=interpret)

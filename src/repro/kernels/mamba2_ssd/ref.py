@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the per-head Mamba2 SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd(x, b, c, dt, a, d, s0):
+    """Sequential reference, one head.
+
+    x: (B, S, hd), b/c: (B, S, N), dt: (B, S) (post-softplus), a: scalar < 0,
+    d: scalar, s0: (B, N, hd).
+      S_t = exp(dt_t * a) S_{t-1} + dt_t * b_t x_t^T
+      y_t = c_t . S_t + d * x_t
+    Returns (y (B, S, hd), S_final)."""
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp            # (B,hd), (B,N), (B,N), (B,)
+        dec = jnp.exp(dt_t * a)[:, None, None]
+        state = state * dec + dt_t[:, None, None] * \
+            b_t[:, :, None] * x_t[:, None, :]
+        y = jnp.einsum("bn,bnh->bh", c_t, state) + d * x_t
+        return state, y
+
+    xs = (x.transpose(1, 0, 2), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), dt.transpose(1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2), final

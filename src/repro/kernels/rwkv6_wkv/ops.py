@@ -1,0 +1,25 @@
+"""Public WKV op: Pallas chunked kernel with jnp-scan fallback/oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_wkv import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv(r, k, v, w, u, s0, *, use_kernel: bool | None = None,
+        interpret: bool | None = None, chunk: int = 64):
+    """Chunked WKV. Shapes as in :mod:`ref`. Differentiable via the scan
+    fallback; the kernel path is used for serving/prefill where the
+    sequential scan would serialize the TPU."""
+    if use_kernel is None:
+        use_kernel = _on_tpu() or r.shape[1] >= chunk
+    if not use_kernel or r.shape[1] % min(chunk, r.shape[1]) != 0:
+        return ref.wkv(r, k, v, w, u, s0)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return kernel.wkv_pallas(r, k, v, w, u, s0, chunk=chunk,
+                             interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (data-dependent decay)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv(r, k, v, w, u, s0):
+    """Sequential reference.
+
+    r/k/v/w: (B, S, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+      y_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (B, S, H, hd), S_final)."""
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       u[None, :, :, None] * kv + state)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,94 @@
+"""Collective-traffic extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+per-device HLO module. Optimized HLO prints operands without type literals,
+so wire bytes are derived from the *result* type plus the collective's
+semantics (ring algorithms), with the group size parsed from
+``replica_groups=[G,S]`` iota notation:
+
+    all-reduce         2*(g-1)/g * result      (reduce-scatter + all-gather ring)
+    all-gather           (g-1)/g * result      (result = gathered size)
+    reduce-scatter       (g-1)   * result      (result = scattered shard)
+    all-to-all           (g-1)/g * result
+    collective-permute             result
+
+Async ``-start``/``-done`` pairs are counted once via the ``-start`` op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64"
+                      r"|c64|c128)\[([0-9,]*)\]")
+# result type is either a single literal or a tuple which may contain
+# /*index=N*/ comments — match non-greedily up to the opcode
+_OP_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _result_bytes(result_str: str) -> int:
+    total = 0
+    for dtype, dims in _TYPE_RE.findall(result_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _wire_factor(op: str, g: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-gather":
+        return (g - 1) / g
+    if op == "reduce-scatter":
+        return float(g - 1)
+    if op == "all-to-all":
+        return (g - 1) / g
+    return 1.0                     # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes injected into the interconnect, per collective family."""
+    totals: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_str, op, _ = m.group(1), m.group(2), m.group(3)
+        size = _result_bytes(result_str)
+        g = _group_size(line)
+        totals[op] += size * _wire_factor(op, g)
+        counts[op] += 1
+    out: Dict[str, int] = {f"{k.replace('-', '_')}_bytes": int(v)
+                           for k, v in totals.items()}
+    out.update({f"{k.replace('-', '_')}_count": v for k, v in counts.items()})
+    out["total_bytes"] = int(sum(totals.values()))
+    out["total_count"] = sum(counts.values())
+    return out

@@ -1,0 +1,92 @@
+"""Roofline terms for TPU v5e from dry-run compiled artifacts.
+
+Hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM bandwidth,
+~50 GB/s/link ICI. ``cost_analysis()``/HLO parsing operate on the per-device
+partitioned module, so the three terms are per-chip step times directly:
+
+    t_compute    = device_FLOPs / peak_FLOP/s
+    t_memory     = device_HBM_bytes / HBM_bw
+    t_collective = device_collective_bytes / ICI_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    device_flops: float
+    device_bytes: float
+    device_coll_bytes: float
+    model_flops_total: float      # 6*N*D (train) / 2*N*D (inference), global
+    hlo_flops_total: float        # device_flops * n_chips
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if self.hlo_flops_total <= 0:
+            return 0.0
+        return self.model_flops_total / self.hlo_flops_total
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        bound: (useful flop time) / (achievable step time)."""
+        ideal = self.model_flops_total / (self.n_chips * PEAK_FLOPS)
+        if self.bound_time <= 0:
+            return 0.0
+        return ideal / self.bound_time
+
+    def to_dict(self) -> Dict:
+        return dict(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, dominant=self.dominant,
+            device_flops=self.device_flops, device_bytes=self.device_bytes,
+            device_coll_bytes=self.device_coll_bytes,
+            model_flops_total=self.model_flops_total,
+            hlo_flops_total=self.hlo_flops_total,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+            n_chips=self.n_chips)
+
+
+def model_flops(cfg, shape_name: str, n_tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference (N = active params)."""
+    n = cfg.n_active_params()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens
+
+
+def build(cost: Dict, coll: Dict, n_chips: int,
+          model_flops_total: float) -> Roofline:
+    dev_flops = float(cost.get("flops", 0.0))
+    dev_bytes = float(cost.get("bytes accessed", 0.0))
+    dev_coll = float(coll.get("total_bytes", 0))
+    return Roofline(
+        t_compute=dev_flops / PEAK_FLOPS,
+        t_memory=dev_bytes / HBM_BW,
+        t_collective=dev_coll / ICI_BW,
+        device_flops=dev_flops, device_bytes=dev_bytes,
+        device_coll_bytes=dev_coll,
+        model_flops_total=model_flops_total,
+        hlo_flops_total=dev_flops * n_chips,
+        n_chips=n_chips)

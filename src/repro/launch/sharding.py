@@ -1,0 +1,172 @@
+"""Logical-axis -> PartitionSpec resolution (MaxText-style rule table).
+
+Every parameter / activation / cache dimension carries a logical axis name;
+rules map each name to an ordered list of mesh-axis candidates. Resolution is
+greedy left-to-right per tensor with two constraints:
+  * divisibility — a mesh axis is only used if it divides the dim size,
+  * exclusivity — each mesh axis is used at most once per tensor.
+Non-divisible axes degrade to replication (8 kv heads never shard on a
+16-way model axis), and long decode caches shard their time dim over the
+otherwise-idle ``data`` axis when batch==1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ordered candidates per logical axis; tuples are joint (multi-axis) shards
+PRIORITIES: Dict[str, List[Tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",), ("pod",)],
+    "cache_time": [("pod", "data"), ("data",), ("pod",)],
+    # dp profile (small models): batch spreads over the model axis too
+    "batch_dp": [("pod", "data", "model"), ("data", "model"),
+                 ("pod", "data"), ("data",)],
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    # head_dim deliberately has NO candidates: sharding the attention
+    # contraction dim forces SPMD into replicated compute + reshard storms
+    # (measured ~30x flop inflation on smollm/qwen2.5 whose head counts
+    # don't divide the model axis). Non-divisible head axes replicate.
+    "head_dim": [],
+    "experts": [("model",)],
+    "ff": [("model",)],
+    "embed": [("pod", "data"), ("data",)],     # FSDP axis for params
+    "embed2": [("model",)],
+    "heads_x_dim": [("model",)],
+    "state": [],
+    "layers": [],
+    "shared_apps": [],
+}
+
+
+def spec_for(axes: Optional[Tuple[Optional[str], ...]],
+             shape: Sequence[int], mesh, *, profile: str = "fsdp_tp") -> P:
+    """Resolve one tensor's logical axes tuple to a PartitionSpec.
+
+    Profiles:
+      * ``fsdp_tp`` (large models): params FSDP over data + TP over model.
+      * ``dp`` (<= ~1.5B params): pure data parallelism — batch spreads over
+        BOTH mesh axes, parameters replicate, optimizer moments stay sharded
+        (ZeRO-1). Small models can't use 16-way TP productively (head counts
+        often indivisible; per-layer FSDP gathers cost more than they save).
+    """
+    if axes is None:
+        return P()
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    parts: List[Any] = []
+    # expert weights are already n_experts/TP-way sharded on `model`;
+    # FSDP-sharding their embed dim too would force a full expert-weight
+    # all-gather around every shard_map MoE layer (measured: dominates the
+    # collective term). Same for embedding/head tables (vocab -> model):
+    # FSDP on their embed dim makes SPMD gather full (B, S, V) logits in the
+    # loss backward (measured: 211 GB/step on the two-pod mesh). Tensors
+    # already model-sharded stay out of FSDP.
+    has_experts = ("experts" in axes) or ("vocab" in axes)
+    for dim, name in enumerate(axes):
+        assignment = None
+        lookup = name
+        if profile == "dp" and name in ("batch", "cache_time"):
+            lookup = "batch_dp"
+        if has_experts and name == "embed":
+            name = None
+        if name is not None:
+            for cand in PRIORITIES.get(lookup, []):
+                if any(a in used or a not in mesh_sizes for a in cand):
+                    continue
+                total = 1
+                for a in cand:
+                    total *= mesh_sizes[a]
+                if shape[dim] % total == 0 and shape[dim] > 0:
+                    assignment = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        parts.append(assignment)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh, *, profile: str = "fsdp_tp",
+                   kind: str = "cache"):
+    """NamedSharding tree for a params/cache pytree.
+
+    ``axes_tree`` leaves are tuples of logical names (or None); ``shape_tree``
+    leaves are arrays or ShapeDtypeStructs. ``kind="param"`` with the ``dp``
+    profile replicates everything (pure data parallelism)."""
+    is_axes_leaf = lambda x: x is None or (
+        isinstance(x, tuple) and all(isinstance(e, str) or e is None for e in x))
+    flat_axes = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)[0]
+    flat_shapes, tdef = jax.tree.flatten(shape_tree)
+    assert len(flat_axes) == len(flat_shapes), \
+        (len(flat_axes), len(flat_shapes))
+    if profile == "dp" and kind == "param":
+        shardings = [NamedSharding(mesh, P()) for _ in flat_axes]
+    else:
+        shardings = [NamedSharding(mesh, spec_for(a, s.shape, mesh,
+                                                  profile=profile))
+                     for a, s in zip(flat_axes, flat_shapes)]
+    return tdef.unflatten(shardings)
+
+
+def batch_specs(batch_tree, mesh, *, profile: str = "fsdp_tp",
+                ) -> Dict[str, Any]:
+    """Input batch shardings: leading dim is batch; everything else replicated."""
+    def leaf(sd):
+        if getattr(sd, "ndim", 0) >= 1:
+            return NamedSharding(mesh, spec_for(
+                ("batch",) + (None,) * (sd.ndim - 1), sd.shape, mesh,
+                profile=profile))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_axes(cfg) -> Dict[str, Tuple]:
+    """Logical axes for decode caches (mirrors transformer.init_decode_caches)."""
+    if cfg.rwkv:
+        return dict(
+            tm_shift=("layers", "batch", "embed2"),
+            cm_shift=("layers", "batch", "embed2"),
+            wkv=("layers", "batch", "heads", None, None))
+    if cfg.family in ("ssm", "hybrid"):
+        axes = dict(
+            conv=("layers", "batch", None, "ff"),
+            ssm=("layers", "batch", "heads", "state", None))
+        if cfg.attn_every:
+            axes["k"] = ("shared_apps", "batch", "cache_time", "kv_heads",
+                         "head_dim")
+            axes["v"] = axes["k"]
+        return axes
+    kv = ("layers", "batch", "cache_time", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv}
+
+
+def opt_state_shardings(axes_tree, params_shapes, opt_state_shapes, mesh):
+    """Adam moments are ALWAYS FSDP-sharded (ZeRO-1 when params replicate);
+    None/int leaves replicate."""
+    moment_shardings = tree_shardings(axes_tree, params_shapes, mesh,
+                                      profile="fsdp_tp", kind="param")
+    return {
+        "mu": _mask_like(moment_shardings, opt_state_shapes["mu"], mesh),
+        "nu": _mask_like(moment_shardings, opt_state_shapes["nu"], mesh),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def _mask_like(param_shardings, moment_tree, mesh):
+    rep = NamedSharding(mesh, P())
+    flat_s = jax.tree.leaves(param_shardings)
+    flat_m, tdef = jax.tree.flatten(moment_tree,
+                                    is_leaf=lambda x: x is None)
+    # params tree and moment tree align leaf-for-leaf (moments None for ints)
+    out = []
+    si = 0
+    for m in flat_m:
+        s = flat_s[si]
+        si += 1
+        out.append(rep if m is None else s)
+    return tdef.unflatten(out)

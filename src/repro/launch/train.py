@@ -1,0 +1,122 @@
+"""End-to-end training driver.
+
+Wires together: config -> mesh -> sharded init -> data pipeline (prefetch) ->
+jitted train_step -> supervisor (async checkpoint / restore-on-failure /
+straggler monitor) -> optional AWAPart expert-placement adaptation for MoE
+archs.
+
+On this CPU container it runs reduced configs (``--reduced``) for real; the
+same driver lowers the full configs on the production mesh (see dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.data.pipeline import DataConfig, Prefetcher, make_stream
+from repro.launch.mesh import dp_axes, make_host_mesh
+from repro.models import lm
+from repro.models.moe import ShardCtx
+from repro.optim import AdamWConfig
+from repro.runtime.resilience import SupervisorConfig, TrainSupervisor
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    metrics: Dict[str, float]
+
+
+def build(arch: str, *, reduced: bool, batch: int, seq: int, steps: int,
+          seed: int = 0, data_parallel: int = 1, model_parallel: int = 1,
+          use_flash: bool = False):
+    cfg = configs.get(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if use_flash:
+        cfg = dataclasses.replace(cfg, use_flash=True)
+    mesh = make_host_mesh(data=data_parallel, model=model_parallel)
+    ctx = ShardCtx(mesh=mesh, dp_axes=dp_axes(mesh))
+    opt_cfg = AdamWConfig(total_steps=steps, warmup_steps=max(steps // 20, 5))
+
+    key = jax.random.PRNGKey(seed)
+    params, axes, opt_state = lm.init_all(key, cfg)
+
+    data_cfg = DataConfig(seed=seed, global_batch=batch, seq_len=seq)
+    stream = make_stream(cfg, data_cfg)
+
+    step_fn = jax.jit(functools.partial(
+        lm.train_step, cfg=cfg, ctx=ctx, opt_cfg=opt_cfg),
+        donate_argnums=(0, 1))
+    return cfg, mesh, ctx, params, opt_state, stream, step_fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--inject-failure-at", type=int, default=-1,
+                    help="simulate a node failure at this step (test)")
+    args = ap.parse_args()
+
+    cfg, mesh, ctx, params, opt_state, stream, step_fn = build(
+        args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq,
+        steps=args.steps)
+    prefetch = Prefetcher(stream)
+    losses = []
+
+    def one_step(state: TrainState, step: int) -> TrainState:
+        if step == args.inject_failure_at and not getattr(
+                one_step, "_failed", False):
+            one_step._failed = True
+            raise RuntimeError("injected node failure")
+        _, batch_np = next(prefetch)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(state.params, state.opt_state,
+                                             batch)
+        return TrainState(params, opt_state,
+                          {k: float(v) for k, v in metrics.items()})
+
+    sup = TrainSupervisor(
+        SupervisorConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
+        one_step,
+        state_to_tree=lambda s: {"params": s.params, "opt": s.opt_state},
+        tree_to_state=lambda tree, s: TrainState(tree["params"], tree["opt"],
+                                                 s.metrics),
+    )
+
+    def on_metrics(step, state, dt):
+        losses.append(state.metrics.get("loss", float("nan")))
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {state.metrics['loss']:.4f} "
+                  f"lr {state.metrics['lr']:.2e} {dt*1e3:.0f} ms")
+
+    t0 = time.time()
+    state = TrainState(params, opt_state, {})
+    state = sup.run(state, args.steps, on_metrics=on_metrics)
+    prefetch.close()
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s | "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} | "
+          f"failures={sup.failures} restores={sup.restores} "
+          f"stragglers={len(sup.monitor.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

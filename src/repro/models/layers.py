@@ -1,0 +1,252 @@
+"""Shared neural layers: norms, RoPE, GQA attention, dense MLP.
+
+Parameter trees are plain nested dicts; every init function returns a
+parallel *axes* tree of logical-axis-name tuples consumed by
+``launch.sharding`` to derive PartitionSpecs (MaxText-style logical axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+               dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    w = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return w.astype(dtype), axes
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+def norm_init(cfg: ArchConfig, dim: int, axis_name: str = "embed"):
+    dt = _dtype(cfg.param_dtype)
+    if cfg.norm == "layernorm":
+        return ({"scale": jnp.ones((dim,), dt), "bias": jnp.zeros((dim,), dt)},
+                {"scale": (axis_name,), "bias": (axis_name,)})
+    return {"scale": jnp.ones((dim,), dt)}, {"scale": (axis_name,)}
+
+
+def norm_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm" and "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """qk-norm: RMS norm over the head_dim axis (qwen3 / chameleon style)."""
+    xf = x.astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+def attention_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    a: Axes = {}
+    p["wq"], a["wq"] = dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dt)
+    p["wk"], a["wk"] = dense_init(ks[1], (d, k, hd), ("embed", "kv_heads", "head_dim"), dt)
+    p["wv"], a["wv"] = dense_init(ks[2], (d, k, hd), ("embed", "kv_heads", "head_dim"), dt)
+    p["wo"], a["wo"] = dense_init(ks[3], (h, hd, d), ("heads", "head_dim", "embed"),
+                                  dt, fan_in=h * hd)
+    if cfg.qkv_bias:
+        p["bq"], a["bq"] = jnp.zeros((h, hd), dt), ("heads", "head_dim")
+        p["bk"], a["bk"] = jnp.zeros((k, hd), dt), ("kv_heads", "head_dim")
+        p["bv"], a["bv"] = jnp.zeros((k, hd), dt), ("kv_heads", "head_dim")
+        p["bo"], a["bo"] = jnp.zeros((d,), dt), ("embed",)
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = jnp.ones((hd,), dt), ("head_dim",)
+        p["k_norm"], a["k_norm"] = jnp.ones((hd,), dt), ("head_dim",)
+    return p, a
+
+
+def _masked_softmax(logits, ok_mask, v_dtype, *, f32: bool):
+    """Numerically-stable softmax over the last axis.
+
+    ``f32=False`` keeps the (huge) probability tensor in the compute dtype
+    with only the row statistics in f32 — the flash-attention numerics,
+    expressed in plain HLO. Halves+ the S x T attention-byte footprint."""
+    if f32:
+        logits = jnp.where(ok_mask, logits.astype(jnp.float32), -1e30)
+        return jax.nn.softmax(logits, axis=-1).astype(v_dtype)
+    neg = jnp.asarray(-3e38, logits.dtype)
+    logits = jnp.where(ok_mask, logits, neg)
+    m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+    p = jnp.exp(logits - m.astype(logits.dtype))
+    p = jnp.where(ok_mask, p, 0)
+    denom = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    return (p / jnp.maximum(denom, 1e-30).astype(p.dtype)).astype(v_dtype)
+
+
+def _sdpa_reference(q, k, v, *, causal: bool, q_offset=0,
+                    softmax_f32: bool = True) -> jnp.ndarray:
+    """Grouped-query attention. q: (B,S,H,D), k/v: (B,T,K,D)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(d).astype(
+        q.dtype)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        kpos = jnp.arange(t)[None, :]
+        ok = (qpos >= kpos)[None, None, None]
+    else:
+        ok = jnp.ones((1, 1, 1, s, t), bool)
+    w = _masked_softmax(logits, ok, v.dtype, f32=softmax_f32)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+def attention_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                    positions: jnp.ndarray,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_pos: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """x: (B, S, d). With ``cache`` (k_cache, v_cache of (B, T_max, K, D)):
+    decode/prefill mode — new k/v written at ``cache_pos`` offset."""
+    cd = _dtype(cfg.compute_dtype)
+    xq = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xq, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xq, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if cfg.rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        kc, vc = cache
+        off = cache_pos if cache_pos is not None else 0
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, off, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, off, 0, 0))
+        new_cache = (kc, vc)
+        t = kc.shape[1]
+        # mask out slots beyond the current position
+        kpos = jnp.arange(t)
+        valid = kpos < (off + x.shape[1])
+        k_att, v_att = kc.astype(cd), vc.astype(cd)
+        if cfg.use_flash:
+            from repro.kernels.flash_attention import ops as flash
+            out = flash.flash_attention(
+                q, k_att, v_att, causal=cfg.causal, q_offset=off,
+                kv_valid_len=off + x.shape[1])
+        else:
+            b, s = q.shape[:2]
+            kh = k_att.shape[2]
+            g = q.shape[2] // kh
+            qg = q.reshape(b, s, kh, g, q.shape[-1])
+            logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_att) / \
+                np.sqrt(q.shape[-1]).astype(cd)
+            qpos = jnp.arange(s)[:, None] + off
+            causal_ok = (qpos >= kpos[None, :]) if cfg.causal else True
+            ok = jnp.logical_and(valid[None, :], causal_ok)[
+                None, None, None]
+            w = _masked_softmax(logits, ok, cd, f32=cfg.softmax_f32)
+            out = jnp.einsum("bkgst,btkd->bskgd", w, v_att)
+            out = out.reshape(b, s, -1, q.shape[-1])
+    else:
+        if cfg.use_flash:
+            from repro.kernels.flash_attention import ops as flash
+            out = flash.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            out = _sdpa_reference(q, k, v, causal=cfg.causal,
+                                  softmax_f32=cfg.softmax_f32)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    if cfg.qkv_bias:
+        y = y + p["bo"].astype(cd)
+    return y.astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# dense MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------- #
+
+def mlp_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p: Params = {}
+    a: Axes = {}
+    if cfg.activation == "silu":
+        p["wg"], a["wg"] = dense_init(ks[0], (d, f), ("embed", "ff"), dt)
+    p["wi"], a["wi"] = dense_init(ks[1], (d, f), ("embed", "ff"), dt)
+    p["wo"], a["wo"] = dense_init(ks[2], (f, d), ("ff", "embed"), dt)
+    if cfg.qkv_bias:   # starcoder2-style: biases everywhere
+        p["bi"], a["bi"] = jnp.zeros((f,), dt), ("ff",)
+        p["bo"], a["bo"] = jnp.zeros((d,), dt), ("embed",)
+    return p, a
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cd = _dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    h = xc @ p["wi"].astype(cd)
+    if "bi" in p:
+        h = h + p["bi"].astype(cd)
+    if cfg.activation == "silu":
+        g = xc @ p["wg"].astype(cd)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = h @ p["wo"].astype(cd)
+    if "bo" in p:
+        y = y + p["bo"].astype(cd)
+    return y.astype(x.dtype)

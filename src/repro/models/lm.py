@@ -1,0 +1,160 @@
+"""LM-level step functions: train / prefill / decode, plus input specs.
+
+These are the functions the launcher jits and the dry-run lowers for every
+(architecture × input-shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import transformer
+from repro.models.moe import ShardCtx
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+AUX_WEIGHT = 0.01
+
+
+# --------------------------------------------------------------------------- #
+# loss
+# --------------------------------------------------------------------------- #
+
+def _cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-position CE via one-hot contraction.
+
+    ``take_along_axis`` over a model-sharded vocab makes SPMD all-gather the
+    full (B, S, V) logits on multi-axis meshes (measured 211 GB/step); the
+    one-hot einsum partitions cleanly (contraction over the sharded vocab is
+    a small psum)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = (targets[..., None] ==
+              jnp.arange(logits.shape[-1])[None, None, :])
+    picked = jnp.sum(logits.astype(jnp.float32) * onehot, axis=-1)
+    return lse - picked
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            ctx: Optional[ShardCtx]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if cfg.embedding_inputs:
+        # masked-prediction (HuBERT-style): CE on masked frames only
+        logits, aux, _ = transformer.forward(params, batch["embeddings"],
+                                             cfg, ctx)
+        labels, mask = batch["labels"], batch["mask"]
+        nll = _cross_entropy(logits, labels)
+        # pin the per-token loss sharding: the mean's cotangent otherwise
+        # re-enters the backward pass replicated on multi-axis meshes and
+        # SPMD gathers every activation to full batch (measured 211 GB/step)
+        nll = transformer.constrain_activations(nll, cfg)
+        denom = jnp.maximum(mask.sum(), 1)
+        loss = (nll * mask).sum() / denom
+    else:
+        tokens = batch["tokens"]
+        logits, aux, _ = transformer.forward(params, tokens, cfg, ctx)
+        nll = _cross_entropy(logits[:, :-1], tokens[:, 1:])   # next-token CE
+        nll = transformer.constrain_activations(nll, cfg)
+        loss = nll.mean()
+    total = loss + AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# steps
+# --------------------------------------------------------------------------- #
+
+def train_step(params, opt_state, batch, cfg: ArchConfig,
+               ctx: Optional[ShardCtx], opt_cfg: AdamWConfig):
+    # allow_int: integer leaves (MoE inv_perm placement) get float0 grads,
+    # which the optimizer ignores
+    grad_fn = jax.value_and_grad(lambda p: loss_fn(p, batch, cfg, ctx),
+                                 has_aux=True, allow_int=True)
+    (total, metrics), grads = grad_fn(params)
+    new_params, new_opt, opt_metrics = adamw_update(params, grads, opt_state,
+                                                    opt_cfg)
+    metrics = dict(metrics, total=total, **opt_metrics)
+    return new_params, new_opt, metrics
+
+
+def prefill_step(params, batch, cfg: ArchConfig, ctx: Optional[ShardCtx]):
+    """Full-sequence forward producing logits for the last position and the
+    decode-ready caches."""
+    inputs = batch["embeddings"] if cfg.embedding_inputs else batch["tokens"]
+    logits, _, caches = transformer.forward(params, inputs, cfg, ctx,
+                                            collect_cache=cfg.has_decode)
+    return logits[:, -1], caches
+
+
+def decode_step(params, caches, batch, cfg: ArchConfig,
+                ctx: Optional[ShardCtx]):
+    """One new token against a KV/state cache of ``seq_len``."""
+    return transformer.decode_step(params, caches, batch["token"],
+                                   batch["pos"], cfg, ctx)
+
+
+# --------------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# --------------------------------------------------------------------------- #
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Model inputs for a shape cell. For ``[audio]``/``[vlm]`` archs the
+    modality frontend is a stub: specs carry precomputed frame/patch
+    embeddings (audio) or pre-tokenized VQ ids (vlm)."""
+    info = SHAPES[shape_name]
+    s, b = info["seq_len"], batch_override or info["global_batch"]
+    kind = info["kind"]
+    if kind == "train":
+        if cfg.embedding_inputs:
+            return {"embeddings": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                    "labels": _sds((b, s), jnp.int32),
+                    "mask": _sds((b, s), jnp.bool_)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    if kind == "prefill":
+        if cfg.embedding_inputs:
+            return {"embeddings": _sds((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token against a cache of length s
+    return {"token": _sds((b,), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str,
+                batch_override: Optional[int] = None):
+    info = SHAPES[shape_name]
+    s, b = info["seq_len"], batch_override or info["global_batch"]
+    caches = jax.eval_shape(
+        lambda: transformer.init_decode_caches(cfg, b, s))
+    return caches
+
+
+def make_batch(cfg: ArchConfig, shape_name: str, rng: np.random.Generator,
+               batch_override: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch matching input_specs (for smoke tests/examples)."""
+    specs = input_specs(cfg, shape_name, batch_override)
+    out = {}
+    for k, sd in specs.items():
+        if sd.dtype == jnp.int32 and k in ("tokens", "labels", "token"):
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=sd.shape), jnp.int32)
+        elif k == "pos":
+            out[k] = jnp.asarray(0, jnp.int32)
+        elif sd.dtype == jnp.bool_:
+            out[k] = jnp.asarray(rng.random(sd.shape) < 0.3)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=sd.shape), jnp.float32
+                                 ).astype(sd.dtype)
+    return out
+
+
+def init_all(key, cfg: ArchConfig, opt: bool = True):
+    params, axes = transformer.init_params(key, cfg)
+    opt_state = adamw_init(params) if opt else None
+    return params, axes, opt_state

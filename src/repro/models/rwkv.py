@@ -1,0 +1,218 @@
+"""RWKV-6 "Finch" layer: data-dependent decay WKV + channel mix.
+
+Faithful to arXiv:2404.05892: ddlerp token-shift (LoRA-modulated mixing),
+per-channel data-dependent decay ``w = exp(-exp(w0 + lora(x_w)))``, per-head
+bonus ``u``, grouped head-norm, gated output. The training path runs the WKV
+recurrence with ``lax.scan`` (reference); the Pallas chunked kernel
+(``kernels/rwkv6_wkv``) is the performance path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Axes, Params, _dtype, dense_init
+
+MIX_LORA = 32
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def n_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv6_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    nh = n_heads(cfg)
+    dt = _dtype(cfg.param_dtype)
+    ks = iter(jax.random.split(key, 16))
+    p: Params = {}
+    a: Axes = {}
+
+    # ddlerp token-shift mixing
+    p["mu_x"], a["mu_x"] = jnp.full((d,), 0.5, dt), ("embed",)
+    p["mu"], a["mu"] = jnp.full((5, d), 0.5, dt), (None, "embed")
+    p["mix_w1"], a["mix_w1"] = dense_init(next(ks), (d, 5 * MIX_LORA),
+                                          ("embed", None), dt)
+    p["mix_w2"], a["mix_w2"] = (jax.random.normal(
+        next(ks), (5, MIX_LORA, d)) * 0.01).astype(dt), (None, None, "embed")
+
+    # data-dependent decay lora
+    p["w0"], a["w0"] = jnp.full((d,), -2.0, dt), ("embed",)
+    p["decay_w1"], a["decay_w1"] = dense_init(next(ks), (d, cfg.rwkv_lora_dim),
+                                              ("embed", None), dt)
+    p["decay_w2"], a["decay_w2"] = (jax.random.normal(
+        next(ks), (cfg.rwkv_lora_dim, d)) * 0.01).astype(dt), (None, "embed")
+
+    p["u"], a["u"] = (jax.random.normal(next(ks), (nh, hd)) * 0.1).astype(dt), \
+        ("heads", "head_dim")
+    for name in ("wr", "wk", "wv", "wg", "wo"):
+        p[name], a[name] = dense_init(next(ks), (d, d), ("embed", "heads_x_dim"), dt)
+    p["ln_x_scale"], a["ln_x_scale"] = jnp.ones((d,), dt), ("embed",)
+    p["ln_x_bias"], a["ln_x_bias"] = jnp.zeros((d,), dt), ("embed",)
+
+    # channel mix
+    p["cm_mu_k"], a["cm_mu_k"] = jnp.full((d,), 0.5, dt), ("embed",)
+    p["cm_mu_r"], a["cm_mu_r"] = jnp.full((d,), 0.5, dt), ("embed",)
+    p["cm_k"], a["cm_k"] = dense_init(next(ks), (d, f), ("embed", "ff"), dt)
+    p["cm_v"], a["cm_v"] = dense_init(next(ks), (f, d), ("ff", "embed"), dt)
+    p["cm_r"], a["cm_r"] = dense_init(next(ks), (d, d), ("embed", "embed2"), dt)
+    return p, a
+
+
+def _ddlerp(p: Params, x, xs, cd):
+    """Data-dependent lerp between x and its shift xs -> (x_w, x_k, x_v, x_r, x_g)."""
+    xx = (xs - x).astype(cd)
+    xxx = x + xx * p["mu_x"].astype(cd)
+    lora = jnp.tanh(xxx @ p["mix_w1"].astype(cd))
+    lora = lora.reshape(*lora.shape[:-1], 5, MIX_LORA)
+    delta = jnp.einsum("...nl,nld->...nd", lora, p["mix_w2"].astype(cd))
+    mix = p["mu"].astype(cd) + delta                        # (..., 5, d)
+    return tuple(x + xx * mix[..., i, :] for i in range(5))
+
+
+def _decay(p: Params, x_w, cd):
+    ww = p["w0"].astype(cd) + jnp.tanh(
+        x_w @ p["decay_w1"].astype(cd)) @ p["decay_w2"].astype(cd)
+    return jnp.exp(-jnp.exp(ww.astype(jnp.float32)))        # (..., d) in (0,1)
+
+
+def _head_norm(p: Params, y, nh, hd):
+    """GroupNorm over each head's hd channels."""
+    shape = y.shape
+    yf = y.astype(jnp.float32).reshape(*shape[:-1], nh, hd)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(shape)
+    return yn * p["ln_x_scale"].astype(jnp.float32) + \
+        p["ln_x_bias"].astype(jnp.float32)
+
+
+def wkv_scan(r, k, v, w, u):
+    """Reference WKV recurrence. r/k/v/w: (B, S, H, hd) f32; u: (H, hd).
+
+    y_t = r_t . (diag(u) k_t v_t^T + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y: (B, S, H, hd), final state (B, H, hd, hd)."""
+    b, s, h, hd = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                 # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       u[None, :, :, None] * kv + state)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def time_mix(p: Params, x, xs, state, cfg: ArchConfig, *, use_kernel=False):
+    """x: (B,S,d), xs: shifted x, state: (B,H,hd,hd) or None."""
+    cd = jnp.float32   # WKV runs in f32 (decay products)
+    b, s, d = x.shape
+    nh, hd = n_heads(cfg), cfg.rwkv_head_dim
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x.astype(cd), xs.astype(cd), cd)
+    w = _decay(p, x_w, cd).reshape(b, s, nh, hd)
+    r = (x_r @ p["wr"].astype(cd)).reshape(b, s, nh, hd)
+    k = (x_k @ p["wk"].astype(cd)).reshape(b, s, nh, hd)
+    v = (x_v @ p["wv"].astype(cd)).reshape(b, s, nh, hd)
+    g = jax.nn.silu(x_g @ p["wg"].astype(cd))
+    u = p["u"].astype(cd)
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    if use_kernel:
+        from repro.kernels.rwkv6_wkv import ops as wkv_ops
+        y, new_state = wkv_ops.wkv(r, k, v, w, u, state)
+    else:
+        # fold initial state by prepending a virtual step? state==0 in train.
+        y, new_state = _wkv_with_state(r, k, v, w, u, state)
+    y = _head_norm(p, y.reshape(b, s, d), nh, hd)
+    y = (y * g) @ p["wo"].astype(cd)
+    return y.astype(x.dtype), new_state
+
+
+def _wkv_with_state(r, k, v, w, u, s0):
+    b, s, h, hd = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       u[None, :, :, None] * kv + state)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def channel_mix(p: Params, x, xs, cfg: ArchConfig):
+    cd = _dtype(cfg.compute_dtype)
+    xc, xsc = x.astype(cd), xs.astype(cd)
+    x_k = xc + (xsc - xc) * p["cm_mu_k"].astype(cd)
+    x_r = xc + (xsc - xc) * p["cm_mu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(x_k @ p["cm_k"].astype(cd)))
+    return (jax.nn.sigmoid(x_r @ p["cm_r"].astype(cd))
+            * (k @ p["cm_v"].astype(cd))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# block-level apply (shift handling for train vs decode)
+# --------------------------------------------------------------------------- #
+
+def shift_train(x):
+    """xs[t] = x[t-1], zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def rwkv_block_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    from repro.models.layers import norm_init
+    k1, k2 = jax.random.split(key)
+    tm, tma = rwkv6_init(k1, cfg)
+    n1, n1a = norm_init(cfg, cfg.d_model)
+    n2, n2a = norm_init(cfg, cfg.d_model)
+    return ({"ln1": n1, "tm": tm, "ln2": n2},
+            {"ln1": n1a, "tm": tma, "ln2": n2a})
+
+
+def rwkv_block_apply(p: Params, x, cfg: ArchConfig, *, use_kernel=False):
+    """Training forward of one RWKV6 block (time-mix + channel-mix)."""
+    from repro.models.layers import norm_apply
+    h = norm_apply(p["ln1"], x, cfg)
+    y, _ = time_mix(p["tm"], h, shift_train(h), None, cfg,
+                    use_kernel=use_kernel)
+    x = x + y
+    h = norm_apply(p["ln2"], x, cfg)
+    x = x + channel_mix(p["tm"], h, shift_train(h), cfg)
+    return x
+
+
+def rwkv_block_decode(p: Params, x, state: Dict, cfg: ArchConfig):
+    """Single-token step. x: (B, d). state: {tm_shift, cm_shift, wkv}."""
+    from repro.models.layers import norm_apply
+    h = norm_apply(p["ln1"], x[:, None, :], cfg)
+    y, new_wkv = time_mix(p["tm"], h, state["tm_shift"][:, None, :],
+                          state["wkv"], cfg)
+    x = x + y[:, 0]
+    h2 = norm_apply(p["ln2"], x[:, None, :], cfg)
+    y2 = channel_mix(p["tm"], h2, state["cm_shift"][:, None, :], cfg)
+    x = x + y2[:, 0]
+    return x, dict(tm_shift=h[:, 0], cm_shift=h2[:, 0], wkv=new_wkv)
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int):
+    nh, hd = n_heads(cfg), cfg.rwkv_head_dim
+    return dict(
+        tm_shift=jnp.zeros((batch, cfg.d_model), jnp.float32),
+        cm_shift=jnp.zeros((batch, cfg.d_model), jnp.float32),
+        wkv=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    )

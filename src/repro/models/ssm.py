@@ -1,0 +1,202 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked-scan formulation.
+
+Used by zamba2-7b's backbone. The chunked algorithm (Dao & Gu, 2024) splits
+the sequence into chunks: a quadratic intra-chunk term (MXU-friendly matmuls)
+plus a linear inter-chunk state recurrence (``lax.scan`` over chunk states).
+A single-token step (``mamba2_decode``) carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Axes, Params, _dtype, dense_init
+
+N_GROUPS = 1
+
+
+def dims(cfg: ArchConfig) -> Dict[str, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return dict(
+        d_in=d_in,
+        n_heads=d_in // cfg.ssm_head_dim,
+        conv_dim=d_in + 2 * N_GROUPS * cfg.ssm_state,
+    )
+
+
+def mamba2_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    d = cfg.d_model
+    dm = dims(cfg)
+    d_in, nh, conv_dim = dm["d_in"], dm["n_heads"], dm["conv_dim"]
+    proj_out = 2 * d_in + 2 * N_GROUPS * cfg.ssm_state + nh
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p: Params = {}
+    a: Axes = {}
+    p["in_proj"], a["in_proj"] = dense_init(ks[0], (d, proj_out),
+                                            ("embed", "ff"), dt)
+    p["conv_w"], a["conv_w"] = (
+        jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1
+    ).astype(dt), (None, "ff")
+    p["conv_b"], a["conv_b"] = jnp.zeros((conv_dim,), dt), ("ff",)
+    # dt in [0.001, 0.1] via softplus-inverse init
+    dt0 = np.exp(np.random.default_rng(0).uniform(
+        np.log(1e-3), np.log(1e-1), nh)).astype(np.float32)
+    p["dt_bias"], a["dt_bias"] = jnp.asarray(
+        dt0 + np.log(-np.expm1(-dt0)), dt), ("heads",)
+    p["A_log"], a["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt), ("heads",)
+    p["D"], a["D"] = jnp.ones((nh,), dt), ("heads",)
+    p["norm"], a["norm"] = jnp.ones((d_in,), dt), ("ff",)
+    p["out_proj"], a["out_proj"] = dense_init(ks[2], (d_in, d),
+                                              ("ff", "embed"), dt)
+    return p, a
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    dm = dims(cfg)
+    d_in, nh = dm["d_in"], dm["n_heads"]
+    gs = N_GROUPS * cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * gs], axis=-1)
+    return z, xbc, dt  # z: (..., d_in), xbc: (..., d_in + 2gs), dt: (..., nh)
+
+
+def _conv_train(xbc, w, b):
+    """Causal depthwise conv over seq. xbc: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y, z, scale):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = (yf ** 2).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                 return_state: bool = False):
+    """Training/prefill forward. x: (B, S, d) with S % ssm_chunk == 0.
+
+    With ``return_state`` also returns decode-ready {conv, ssm} states."""
+    cd = _dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    dm = dims(cfg)
+    d_in, nh, hd, nstate = (dm["d_in"], dm["n_heads"], cfg.ssm_head_dim,
+                            cfg.ssm_state)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = x.astype(cd) @ p["in_proj"].astype(cd)
+    z, xbc_raw, dtr = _split_proj(zxbcdt, cfg)
+    xbc = _conv_train(xbc_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs, bc = jnp.split(xbc, [d_in], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                  # (B,S,g*N) each
+    xh = xs.reshape(b, nc, q, nh, hd)
+    bmat = bmat.reshape(b, nc, q, N_GROUPS, nstate).astype(jnp.float32)
+    cmat = cmat.reshape(b, nc, q, N_GROUPS, nstate).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    da = (dt * a).reshape(b, nc, q, nh)                        # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                               # inclusive
+
+    # ---- intra-chunk (quadratic in Q) --------------------------------- #
+    # L[t, j] = exp(cum_t - cum_j) for t >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqgn,bcjgn->bcqj", cmat, bmat)       # g=1
+    dtj = dt.reshape(b, nc, q, nh)
+    att = scores[..., None] * lmat * dtj[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqjh,bcjhp->bcqhp",
+                         att.astype(cd), xh)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------ #
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,H)
+    state_contrib = jnp.einsum(
+        "bcjgn,bcjh,bcjhp->bchnp",
+        bmat, (decay_to_end * dtj).astype(jnp.float32),
+        xh.astype(jnp.float32))                                 # (B,nc,H,N,hd)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        contrib, dec = inp                                     # (B,H,N,hd),(B,H)
+        s_new = s_prev * dec[:, :, None, None] + contrib
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, nh, nstate, hd), jnp.float32)
+    s_final, s_before = jax.lax.scan(
+        scan_fn, s0,
+        (state_contrib.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,hd)
+
+    y_inter = jnp.einsum(
+        "bcqgn,bcqh,bchnp->bcqhp",
+        cmat, jnp.exp(cum), s_before.astype(jnp.float32)).astype(cd)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + xh.reshape(b, s, nh, hd) * p["D"].astype(cd)[None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, d_in), z, p["norm"])
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    if return_state:
+        tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]
+        return out, dict(conv=tail, ssm=s_final)
+    return out, None
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+
+def mamba2_init_state(cfg: ArchConfig, batch: int):
+    dm = dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, dm["conv_dim"]),
+                       _dtype(cfg.compute_dtype)),
+        ssm=jnp.zeros((batch, dm["n_heads"], cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32),
+    )
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                  cfg: ArchConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token step. x: (B, d)."""
+    cd = _dtype(cfg.compute_dtype)
+    b, d = x.shape
+    dm = dims(cfg)
+    d_in, nh, hd, nstate = (dm["d_in"], dm["n_heads"], cfg.ssm_head_dim,
+                            cfg.ssm_state)
+    zxbcdt = x.astype(cd) @ p["in_proj"].astype(cd)
+    z, xbc_new, dtr = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([state["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(cd)
+    xbc = jax.nn.silu((conv_in * w[None]).sum(1) + p["conv_b"].astype(cd))
+    new_conv = conv_in[:, 1:, :]
+
+    xs, bc = jnp.split(xbc, [d_in], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    bmat = bmat.reshape(b, N_GROUPS, nstate).astype(jnp.float32)
+    cmat = cmat.reshape(b, N_GROUPS, nstate).astype(jnp.float32)
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                       # (B,H)
+    contrib = jnp.einsum("bgn,bh,bhp->bhnp", bmat, dt, xh)
+    new_ssm = state["ssm"] * dec[:, :, None, None] + contrib
+    y = jnp.einsum("bgn,bhnp->bhp", cmat, new_ssm)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = _gated_norm(y.reshape(b, d_in).astype(cd), z, p["norm"])
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out, dict(conv=new_conv, ssm=new_ssm)

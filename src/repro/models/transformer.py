@@ -1,0 +1,478 @@
+"""Layer stacks for all assigned architectures.
+
+One code path covers dense / MoE / VLM / audio-encoder transformers; the
+hybrid (zamba2) and SSM (rwkv6) stacks plug their own block functions into
+the same scan-over-layers skeleton. Parameters are stacked along a leading
+``layers`` axis and consumed by ``lax.scan`` (fast compiles at 48–81 layers),
+with configurable activation rematerialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (Axes, Params, _dtype, attention_apply,
+                                 attention_init, dense_init, mlp_apply,
+                                 mlp_init, norm_apply, norm_init)
+
+ShardCtx = moe_mod.ShardCtx
+
+
+def _stack_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])
+    axes = jax.tree.map(lambda t: ("layers",) + tuple(t),
+                        axes, is_leaf=lambda x: isinstance(x, tuple))
+    return params, axes
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _scan_layers(body, carry, xs, cfg: ArchConfig):
+    """lax.scan over stacked layers, or an unrolled python loop.
+
+    The unrolled form (``cfg.scan_layers=False``) exists for the dry-run's
+    cost accounting: XLA's HLO cost analysis counts a while-loop body once,
+    so scanned models under-report flops/collectives by ~n_layers; the
+    dry-run compiles small unrolled variants to extrapolate per-layer cost.
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(_remat(body, cfg), carry, xs)
+    n = cfg.n_layers
+    ys = []
+    fn = _remat(body, cfg)
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a, axis=0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------------- #
+# attention-family block (dense / moe / vlm / audio)
+# --------------------------------------------------------------------------- #
+
+def attn_block_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {}
+    a: Axes = {}
+    p["ln1"], a["ln1"] = norm_init(cfg, cfg.d_model)
+    p["attn"], a["attn"] = attention_init(k1, cfg)
+    p["ln2"], a["ln2"] = norm_init(cfg, cfg.d_model)
+    if cfg.is_moe:
+        p["moe"], a["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"], a["mlp"] = mlp_init(k2, cfg)
+    return p, a
+
+
+def attn_block_apply(p: Params, x, cfg: ArchConfig, ctx: Optional[ShardCtx],
+                     *, positions, cache=None, cache_pos=None):
+    x = constrain_activations(x, cfg)
+    h = norm_apply(p["ln1"], x, cfg)
+    y, new_cache = attention_apply(p["attn"], h, cfg, positions=positions,
+                                   cache=cache, cache_pos=cache_pos)
+    x = x + y
+    h = norm_apply(p["ln2"], x, cfg)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        y, aux = mlp_apply(p["mlp"], h, cfg), jnp.float32(0.0)
+    return x + y, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# embedding / head
+# --------------------------------------------------------------------------- #
+
+def embed_init(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    dt = _dtype(cfg.param_dtype)
+    p: Params = {}
+    a: Axes = {}
+    if not cfg.embedding_inputs:
+        p["embed"], a["embed"] = dense_init(
+            key, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dt,
+            fan_in=cfg.d_model)
+    p["ln_f"], a["ln_f"] = norm_init(cfg, cfg.d_model)
+    if not cfg.tied_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["head"], a["head"] = dense_init(
+            k2, (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt)
+    return p, a
+
+
+def embed_tokens(p: Params, tokens, cfg: ArchConfig):
+    cd = _dtype(cfg.compute_dtype)
+    return jnp.take(p["embed"], tokens, axis=0).astype(cd)
+
+
+BATCH_AXES = ("pod", "data")
+BATCH_AXES_DP = ("pod", "data", "model")
+
+
+def _batch_axes_for(cfg, dim_size):
+    """Profile- and divisibility-aware batch axis tuple."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return BATCH_AXES
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        prefer = (BATCH_AXES_DP if cfg is not None
+                  and cfg.sharding_profile == "dp" else BATCH_AXES)
+        candidates = [prefer, ("data", "model"), ("pod", "data"), ("data",)]
+        for cand in candidates:
+            present = tuple(a for a in cand if a in sizes)
+            if not present:
+                continue
+            total = 1
+            for a in present:
+                total *= sizes[a]
+            if dim_size % total == 0:
+                return present
+        return ()
+    except Exception:  # noqa: BLE001
+        return BATCH_AXES
+
+
+def _maybe_constrain(x, spec_names):
+    """with_sharding_constraint if the ambient mesh has the named axes.
+
+    Each entry is an axis name, a tuple of names (joint sharding), or None.
+    Missing axes are dropped; with no mesh context this is a no-op."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        from jax.sharding import PartitionSpec as P
+        parts = []
+        for n in spec_names:
+            if n is None:
+                parts.append(None)
+            elif isinstance(n, tuple):
+                present = tuple(a for a in n if a in mesh.axis_names)
+                parts.append(present if present else None)
+            else:
+                parts.append(n if n in mesh.axis_names else None)
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:  # noqa: BLE001 — no mesh context (plain CPU tests)
+        return x
+
+
+def constrain_activations(x, cfg=None):
+    """Pin (B, S, d) activations to batch sharding at block boundaries.
+
+    Without this, the sharded-embedding gather produces replicated
+    activations and SPMD happily replicates every layer's compute
+    (measured: per-layer flops == global flops on EVERY device).
+    The dp profile spreads batch over the model axis too."""
+    axes = _batch_axes_for(cfg, x.shape[0])
+    if not axes:
+        return x
+    if x.ndim == 3:
+        return _maybe_constrain(x, (axes, None, None))
+    if x.ndim == 2:
+        return _maybe_constrain(x, (axes, None))
+    return x
+
+
+def lm_head(p: Params, x, cfg: ArchConfig):
+    cd = _dtype(cfg.compute_dtype)
+    h = norm_apply(p["ln_f"], x, cfg)
+    w = (p["embed"].T if cfg.tied_embeddings else p["head"]).astype(cd)
+    if cfg.tied_embeddings:
+        # embed is (vocab->model, embed->data)-sharded; contracting the
+        # data-sharded embed dim would all-reduce full (B,S,V) logits.
+        # Gathering the (small) table over data first keeps logits
+        # batch x vocab sharded.
+        w = _maybe_constrain(w, (None, "model"))
+    logits = (h.astype(cd) @ w).astype(jnp.float32)
+    if logits.ndim == 3:
+        axes = _batch_axes_for(cfg, logits.shape[0])
+        vocab_ax = None if (not axes or "model" in axes) else "model"
+        logits = _maybe_constrain(logits, (axes or None, None, vocab_ax))
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# full model init
+# --------------------------------------------------------------------------- #
+
+def init_params(key, cfg: ArchConfig) -> Tuple[Params, Axes]:
+    k_emb, k_blocks, k_shared = jax.random.split(key, 3)
+    p, a = embed_init(k_emb, cfg)
+
+    if cfg.rwkv:
+        blk = functools.partial(rwkv_mod.rwkv_block_init, cfg=cfg)
+        p["blocks"], a["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers, lambda k: blk(k))
+    elif cfg.family in ("ssm", "hybrid"):
+        def mamba_blk(k):
+            bp, ba = ssm_mod.mamba2_init(k, cfg)
+            np_, na = norm_init(cfg, cfg.d_model)
+            return {"ln": np_, "mamba": bp}, {"ln": na, "mamba": ba}
+        p["blocks"], a["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers, lambda k: mamba_blk(k))
+        if cfg.attn_every:
+            p["shared"], a["shared"] = attn_block_init(k_shared, cfg)
+    else:
+        p["blocks"], a["blocks"] = _stack_init(
+            k_blocks, cfg.n_layers,
+            lambda k: attn_block_init(k, cfg))
+    return p, a
+
+
+def n_shared_apps(cfg: ArchConfig) -> int:
+    if not cfg.attn_every:
+        return 0
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+# --------------------------------------------------------------------------- #
+# training/prefill forward
+# --------------------------------------------------------------------------- #
+
+def forward(p: Params, inputs, cfg: ArchConfig, ctx: Optional[ShardCtx],
+            *, collect_cache: bool = False):
+    """inputs: tokens (B, S) int32 or embeddings (B, S, d).
+
+    Returns (logits, aux, caches). ``collect_cache`` materializes KV/state
+    caches for prefill (attention archs get (L,B,S,K,hd) caches sized S).
+    """
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.embedding_inputs:
+        x = inputs.astype(cd)
+        b, s = x.shape[:2]
+    else:
+        x = embed_tokens(p, inputs, cfg)
+        b, s = inputs.shape
+    x = constrain_activations(x, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    if cfg.rwkv:
+        def body(x, blk_p):
+            x = constrain_activations(x, cfg)
+            h = norm_apply(blk_p["ln1"], x, cfg)
+            y, wkv = rwkv_mod.time_mix(blk_p["tm"], h,
+                                       rwkv_mod.shift_train(h), None, cfg,
+                                       use_kernel=cfg.use_flash)
+            x = x + y
+            h2 = norm_apply(blk_p["ln2"], x, cfg)
+            x = x + rwkv_mod.channel_mix(blk_p["tm"], h2,
+                                         rwkv_mod.shift_train(h2), cfg)
+            st = (dict(tm_shift=h[:, -1].astype(jnp.float32),
+                       cm_shift=h2[:, -1].astype(jnp.float32), wkv=wkv)
+                  if collect_cache else None)
+            return x, st
+
+        x, states = _scan_layers(body, x, p["blocks"], cfg)
+        return lm_head(p, x, cfg), jnp.float32(0.0), states
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = p.get("shared")
+        napps = n_shared_apps(cfg)
+        if collect_cache and cfg.attn_every:
+            kshape = (napps, b, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+            kc0, vc0 = jnp.zeros(kshape, cd), jnp.zeros(kshape, cd)
+        else:
+            kc0 = vc0 = jnp.zeros((1, 1, 1, 1, 1), cd)
+
+        def body(carry, inp):
+            x, aux, kc, vc = carry
+            x = constrain_activations(x, cfg)
+            idx, blk_p = inp
+            if shared is not None:
+                app = idx // cfg.attn_every
+
+                def with_attn(args):
+                    x, kc, vc = args
+                    if collect_cache:
+                        kci = jax.lax.dynamic_index_in_dim(kc, app, 0, False)
+                        vci = jax.lax.dynamic_index_in_dim(vc, app, 0, False)
+                        y, ncache, _ = attn_block_apply(
+                            shared, x, cfg, ctx, positions=positions,
+                            cache=(kci, vci), cache_pos=0)
+                        kc = jax.lax.dynamic_update_index_in_dim(
+                            kc, ncache[0], app, 0)
+                        vc = jax.lax.dynamic_update_index_in_dim(
+                            vc, ncache[1], app, 0)
+                    else:
+                        y, _, _ = attn_block_apply(
+                            shared, x, cfg, ctx, positions=positions)
+                    return y, kc, vc
+
+                x, kc, vc = jax.lax.cond(idx % cfg.attn_every == 0,
+                                         with_attn, lambda a: a, (x, kc, vc))
+            h = norm_apply(blk_p["ln"], x, cfg)
+            y, st = ssm_mod.mamba2_apply(blk_p["mamba"], h, cfg,
+                                         return_state=collect_cache)
+            return (x + y, aux, kc, vc), st
+
+        idxs = jnp.arange(cfg.n_layers)
+        (x, aux, kc, vc), states = _scan_layers(
+            body, (x, jnp.float32(0.0), kc0, vc0), (idxs, p["blocks"]), cfg)
+        caches = None
+        if collect_cache:
+            caches = dict(conv=states["conv"], ssm=states["ssm"])
+            if cfg.attn_every:
+                caches["k"], caches["v"] = kc, vc
+        return lm_head(p, x, cfg), aux, caches
+
+    # attention family
+    if collect_cache:
+        kshape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+        kc = jnp.zeros(kshape, cd)
+        vc = jnp.zeros(kshape, cd)
+
+        def body(carry, inp):
+            x, aux, li = carry
+            blk_p, kcl, vcl = inp
+            x, new_cache, a2 = attn_block_apply(
+                blk_p, x, cfg, ctx, positions=positions,
+                cache=(kcl, vcl), cache_pos=0)
+            return (x, aux + a2, li + 1), new_cache
+
+        (x, aux, _), caches = _scan_layers(
+            body, (x, jnp.float32(0.0), 0), (p["blocks"], kc, vc), cfg)
+        caches = {"k": caches[0], "v": caches[1]}
+    else:
+        def body(carry, blk_p):
+            x, aux = carry
+            x, _, a2 = attn_block_apply(blk_p, x, cfg, ctx,
+                                        positions=positions)
+            return (x, aux + a2), None
+
+        (x, aux), _ = _scan_layers(body, (x, jnp.float32(0.0)),
+                                   p["blocks"], cfg)
+        caches = None
+    return lm_head(p, x, cfg), aux, caches
+
+
+# --------------------------------------------------------------------------- #
+# decode (one token, cached)
+# --------------------------------------------------------------------------- #
+
+def init_decode_caches(cfg: ArchConfig, batch: int, max_len: int):
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.rwkv:
+        nh, hd = rwkv_mod.n_heads(cfg), cfg.rwkv_head_dim
+        return dict(
+            tm_shift=jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+            cm_shift=jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+            wkv=jnp.zeros((cfg.n_layers, batch, nh, hd, hd), jnp.float32))
+    if cfg.family in ("ssm", "hybrid"):
+        dm = ssm_mod.dims(cfg)
+        caches = dict(
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                            dm["conv_dim"]), cd),
+            ssm=jnp.zeros((cfg.n_layers, batch, dm["n_heads"],
+                           cfg.ssm_state, cfg.ssm_head_dim), jnp.float32))
+        if cfg.attn_every:
+            napps = n_shared_apps(cfg)
+            kshape = (napps, batch, max_len, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
+            caches["k"] = jnp.zeros(kshape, cd)
+            caches["v"] = jnp.zeros(kshape, cd)
+        return caches
+    kshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+              cfg.resolved_head_dim)
+    return {"k": jnp.zeros(kshape, cd), "v": jnp.zeros(kshape, cd)}
+
+
+def decode_step(p: Params, caches, token, pos, cfg: ArchConfig,
+                ctx: Optional[ShardCtx]):
+    """token: (B,) int32, pos: scalar int32 — returns (logits, new caches)."""
+    cd = _dtype(cfg.compute_dtype)
+    x = embed_tokens(p, token[:, None], cfg)        # (B, 1, d)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    if cfg.rwkv:
+        def body(x1, inp):
+            x1 = constrain_activations(x1, cfg)
+            blk_p, st = inp
+            y, new_st = rwkv_mod.rwkv_block_decode(blk_p, x1, st, cfg)
+            return y, new_st
+        x1, new_states = _scan_layers(
+            body, x[:, 0],
+            (p["blocks"], {k: caches[k] for k in
+                           ("tm_shift", "cm_shift", "wkv")}), cfg)
+        logits = lm_head(p, x1[:, None, :], cfg)
+        return logits[:, 0], new_states
+
+    if cfg.family in ("ssm", "hybrid"):
+        shared = p.get("shared")
+        napps = n_shared_apps(cfg)
+
+        def body(carry, inp):
+            x1, kc, vc = carry                       # x1: (B, d)
+            x1 = constrain_activations(x1, cfg)
+            idx, blk_p, conv_st, ssm_st = inp
+            if shared is not None:
+                app = idx // cfg.attn_every
+
+                def with_attn(args):
+                    x1, kc, vc = args
+                    kci = jax.lax.dynamic_index_in_dim(kc, app, 0, False)
+                    vci = jax.lax.dynamic_index_in_dim(vc, app, 0, False)
+                    y, new_cache, _ = attn_block_apply(
+                        shared, x1[:, None, :], cfg, ctx,
+                        positions=positions, cache=(kci, vci), cache_pos=pos)
+                    kc = jax.lax.dynamic_update_index_in_dim(
+                        kc, new_cache[0], app, 0)
+                    vc = jax.lax.dynamic_update_index_in_dim(
+                        vc, new_cache[1], app, 0)
+                    return y[:, 0], kc, vc
+
+                x1, kc, vc = jax.lax.cond(
+                    idx % cfg.attn_every == 0, with_attn,
+                    lambda a: a, (x1, kc, vc))
+            h = norm_apply(blk_p["ln"], x1[:, None, :], cfg)[:, 0]
+            y, new_st = ssm_mod.mamba2_decode(
+                blk_p["mamba"], h, dict(conv=conv_st, ssm=ssm_st), cfg)
+            return (x1 + y, kc, vc), (new_st["conv"], new_st["ssm"])
+
+        idxs = jnp.arange(cfg.n_layers)
+        kc = caches.get("k", jnp.zeros((max(napps, 1), b, 1, 1, 1), cd))
+        vc = caches.get("v", jnp.zeros((max(napps, 1), b, 1, 1, 1), cd))
+        (x1, kc, vc), (conv_new, ssm_new) = _scan_layers(
+            body, (x[:, 0], kc, vc),
+            (idxs, p["blocks"], caches["conv"], caches["ssm"]), cfg)
+        new_caches = dict(conv=conv_new, ssm=ssm_new)
+        if cfg.attn_every:
+            new_caches["k"], new_caches["v"] = kc, vc
+        logits = lm_head(p, x1[:, None, :], cfg)
+        return logits[:, 0], new_caches
+
+    # attention family
+    def body(carry, inp):
+        x1, aux = carry
+        blk_p, kcl, vcl = inp
+        y, new_cache, a2 = attn_block_apply(
+            blk_p, x1, cfg, ctx, positions=positions,
+            cache=(kcl, vcl), cache_pos=pos)
+        return (y, aux + a2), new_cache
+
+    (x, _), new_kv = _scan_layers(
+        body, (x, jnp.float32(0.0)), (p["blocks"], caches["k"], caches["v"]),
+        cfg)
+    logits = lm_head(p, x, cfg)
+    return logits[:, 0], {"k": new_kv[0], "v": new_kv[1]}

@@ -1,0 +1,91 @@
+"""AdamW with cosine schedule, global-norm clipping, and integer-leaf masking.
+
+Built from scratch (no optax dependency). Integer leaves (e.g. the MoE
+``inv_perm`` placement map) are carried through untouched — they are runtime
+metadata, not trainable parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def _trainable(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32) if _trainable(p)
+        else None, params)
+    return {"mu": zeros, "nu": jax.tree.map(
+        lambda z: None if z is None else jnp.zeros_like(z), zeros,
+        is_leaf=lambda x: x is None),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree) if l is not None
+              and jnp.issubdtype(l.dtype, jnp.inexact)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.float32(0.0)
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, mu, nu):
+        if mu is None or g is None:
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu2, nu2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    # flatten_up_to keeps None grad leaves aligned with their params
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                 "nu": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

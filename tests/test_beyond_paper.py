@@ -1,0 +1,64 @@
+"""Beyond-paper extensions: guard-selected HAC cut, sharded-safe CE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adaptive import AdaptConfig, AWAPartController
+from repro.core.features import FeatureSpace
+from repro.models.lm import _cross_entropy
+
+
+def test_onehot_ce_matches_take_along(rng):
+    logits = jnp.asarray(rng.normal(size=(2, 8, 32)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, 32, (2, 8)), jnp.int32)
+    ours = _cross_entropy(logits, tgt)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ref = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref), atol=1e-5)
+
+
+def test_adapt_reports_chosen_cut(small_lubm):
+    space = FeatureSpace(small_lubm.store,
+                         type_predicate=small_lubm.dictionary.lookup("rdf:type"))
+    cfg = AdaptConfig(cut_candidates=(0.5, 0.75))
+    ctrl = AWAPartController(space, n_shards=4, config=cfg)
+    base = small_lubm.base_workload()
+    space.track_workload(base)
+    ctrl.initial_partition(base)
+    _, report = ctrl.adapt(small_lubm.workload(["EQ1", "EQ2", "EQ3"]))
+    assert report.chosen_cut in cfg.cut_candidates
+
+
+def test_adapt_single_cut_fallback(small_lubm):
+    """Empty candidate tuple -> the paper's fixed manual cut."""
+    space = FeatureSpace(small_lubm.store,
+                         type_predicate=small_lubm.dictionary.lookup("rdf:type"))
+    cfg = AdaptConfig(cut_candidates=(), cut_distance=0.7)
+    ctrl = AWAPartController(space, n_shards=4, config=cfg)
+    base = small_lubm.base_workload()
+    space.track_workload(base)
+    ctrl.initial_partition(base)
+    _, report = ctrl.adapt(small_lubm.workload(["EQ1"]))
+    assert report.chosen_cut == 0.7
+
+
+def test_guard_never_regresses_objective(lubm3):
+    """Whatever cut wins, the accept/revert guard keeps dj monotone."""
+    from repro.query import engine
+    space = FeatureSpace(lubm3.store,
+                         type_predicate=lubm3.dictionary.lookup("rdf:type"))
+    ctrl = AWAPartController(space, n_shards=8)
+    base = lubm3.base_workload()
+    space.track_workload(base)
+    ctrl.initial_partition(base)
+
+    def measure(cand):
+        sh = engine.ShardedStore(lubm3.store, space, cand)
+        return engine.workload_average_time(list(ctrl.workload.values()), sh)
+
+    _, rep = ctrl.adapt(lubm3.workload([f"EQ{i}" for i in range(1, 11)]),
+                        measure=measure)
+    if rep.accepted:
+        assert rep.t_new < rep.t_base
+    else:
+        assert rep.plan.n_moves == 0

@@ -1,0 +1,86 @@
+"""Jaccard distance + HAC: kernel vs oracle vs scipy, hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from scipy.cluster.hierarchy import fcluster
+from scipy.cluster.hierarchy import linkage as scipy_linkage
+from scipy.spatial.distance import squareform
+
+from repro.core import hac
+from repro.kernels.jaccard import kernel as jk
+from repro.kernels.jaccard import ops as jops
+from repro.kernels.jaccard import ref as jref
+
+
+def _bitmaps(rng, n, words):
+    return rng.integers(0, 2 ** 32, size=(n, words), dtype=np.uint32)
+
+
+@pytest.mark.parametrize("n,words", [(4, 1), (14, 2), (24, 4), (64, 8),
+                                     (130, 3)])
+def test_jaccard_kernel_matches_ref(rng, n, words):
+    a = _bitmaps(rng, n, words)
+    d_ref = np.asarray(jref.jaccard_distance(jnp.asarray(a), jnp.asarray(a)))
+    d_ker = np.asarray(jk.jaccard_distance_pallas(
+        jnp.asarray(a), jnp.asarray(a), block_q=32, block_k=32,
+        interpret=True))
+    np.testing.assert_allclose(d_ref, d_ker, atol=1e-6)
+
+
+def test_jaccard_against_numpy_popcount(rng):
+    a = _bitmaps(rng, 10, 3)
+    d = np.asarray(jops.jaccard_distance(a, use_kernel=False))
+    for i in range(10):
+        for j in range(10):
+            inter = np.bitwise_count(a[i] & a[j]).sum()
+            union = np.bitwise_count(a[i] | a[j]).sum()
+            expect = 1 - inter / union if union else 0.0
+            assert abs(d[i, j] - expect) < 1e-6
+
+
+@given(st.integers(2, 24), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jaccard_properties(n, words, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2 ** 32, size=(n, words), dtype=np.uint32)
+    d = np.asarray(jops.jaccard_distance(a, use_kernel=False))
+    assert (d >= -1e-6).all() and (d <= 1 + 1e-6).all()
+    np.testing.assert_allclose(d, d.T, atol=1e-6)          # symmetry
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-6)  # identity
+
+
+@pytest.mark.parametrize("linkage", ["single", "complete", "average"])
+@pytest.mark.parametrize("n", [5, 14, 30])
+def test_hac_matches_scipy(rng, linkage, n):
+    pts = rng.random((n, 3))
+    dist = np.sqrt(((pts[:, None] - pts[None]) ** 2).sum(-1))
+    z_np = hac.hac_numpy(dist, linkage)
+    z_jx = np.asarray(hac.hac_jax(dist.astype(np.float32), linkage))
+    np.testing.assert_allclose(z_np[:, 2], z_jx[:, 2], atol=1e-5)
+    z_sp = scipy_linkage(squareform(dist, checks=False), method=linkage)
+
+    def canon(lbl):
+        return {tuple(sorted(np.where(lbl == v)[0])) for v in set(lbl)}
+
+    for thr in (0.3, 0.6, 0.9):
+        mine = hac.cut(z_np, thr)
+        theirs = fcluster(z_sp, t=thr, criterion="distance")
+        assert canon(mine) == canon(theirs)
+
+
+@given(st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_hac_cut_is_partition(n, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n))
+    d = (d + d.T) / 2
+    np.fill_diagonal(d, 0)
+    z = hac.hac_numpy(d, "average")
+    for thr in (0.0, 0.5, 2.0):
+        labels = hac.cut(z, thr)
+        assert labels.shape == (n,)
+        assert labels.min() >= 0
+    # at threshold >= max distance everything merges
+    assert len(set(hac.cut(z, d.max() + 1).tolist())) == 1

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as fk
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.mamba2_ssd import kernel as sk
+from repro.kernels.mamba2_ssd import ref as sref
+from repro.kernels.rwkv6_wkv import kernel as wk
+from repro.kernels.rwkv6_wkv import ref as wref
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,s,t,h,kh,d,causal,off,valid", [
+    (2, 64, 64, 4, 2, 32, True, 0, None),       # causal GQA
+    (2, 64, 64, 4, 4, 32, False, 0, None),      # bidirectional MHA
+    (1, 40, 40, 2, 1, 16, True, 0, None),       # padding path
+    (2, 1, 128, 4, 2, 32, True, 96, 97),        # decode vs cache
+    (1, 16, 128, 2, 2, 64, True, 112, 128),     # chunked prefill tail
+])
+def test_flash_matches_ref(rng, b, s, t, h, kh, d, causal, off, valid):
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    o_ref = fref.attention(q, k, v, causal=causal, q_offset=off,
+                           kv_valid_len=valid)
+    o_ker = fk.flash_attention_fwd(q, k, v, causal=causal, q_offset=off,
+                                   kv_valid_len=valid, block_q=32,
+                                   block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_ker),
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(rng, dtype):
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), dtype)
+    o_ref = fref.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), causal=True)
+    o_ker = fk.flash_attention_fwd(q, k, v, causal=True, block_q=16,
+                                   block_k=16, interpret=True)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_ref),
+                               np.asarray(o_ker).astype(np.float32),
+                               atol=tol)
+
+
+def test_flash_gradients_match_reference(rng):
+    b, s, h, kh, d = 2, 32, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.float32)
+    g1 = jax.grad(lambda *a: (fops.flash_attention(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: (fref.attention(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# rwkv6 wkv
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,s,h,hd,c", [
+    (2, 32, 2, 16, 8), (1, 64, 4, 32, 16), (2, 128, 1, 64, 64),
+])
+def test_wkv_matches_scan(rng, b, s, h, hd, c):
+    r = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32) * 0.5
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(b, s, h, hd)) - 2.0)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, hd)), jnp.float32) * 0.1
+    s0 = jnp.asarray(rng.normal(size=(b, h, hd, hd)), jnp.float32) * 0.1
+    y0, f0 = wref.wkv(r, k, v, w, u, s0)
+    y1, f1 = wk.wkv_pallas(r, k, v, w, u, s0, chunk=c, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=1e-3)
+
+
+def test_wkv_strong_decay_no_overflow(rng):
+    """w as small as 0.03: the factorized form overflows f32; ours must not."""
+    b, s, h, hd = 1, 64, 2, 16
+    shapes = (b, s, h, hd)
+    r = jnp.asarray(rng.normal(size=shapes), jnp.float32)
+    k = jnp.asarray(rng.normal(size=shapes), jnp.float32)
+    v = jnp.asarray(rng.normal(size=shapes), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=shapes) + 0.2)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, hd)), jnp.float32)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    y0, _ = wref.wkv(r, k, v, w, u, s0)
+    y1, _ = wk.wkv_pallas(r, k, v, w, u, s0, chunk=32, interpret=True)
+    assert np.isfinite(np.asarray(y1)).all()
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-2)
+
+
+# --------------------------------------------------------------------------- #
+# mamba2 ssd
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bb,s,h,hd,n,c", [
+    (2, 32, 2, 16, 8, 8), (1, 64, 3, 32, 16, 16), (2, 128, 1, 64, 64, 128),
+])
+def test_ssd_matches_scan(rng, bb, s, h, hd, n, c):
+    x = jnp.asarray(rng.normal(size=(bb, s, h, hd)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(bb, s, n)), jnp.float32) * 0.5
+    cm = jnp.asarray(rng.normal(size=(bb, s, n)), jnp.float32) * 0.5
+    dt = jnp.asarray(np.abs(rng.normal(size=(bb, s, h))) * 0.1 + 1e-3,
+                     jnp.float32)
+    a = jnp.asarray(-np.exp(rng.normal(size=(h,))), jnp.float32)
+    d = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(bb, h, n, hd)), jnp.float32) * 0.1
+    ys, fs = [], []
+    for hi in range(h):
+        y, f = sref.ssd(x[:, :, hi], b, cm, dt[:, :, hi], a[hi], d[hi],
+                        s0[:, hi])
+        ys.append(y)
+        fs.append(f)
+    y0, f0 = jnp.stack(ys, 2), jnp.stack(fs, 1)
+    y1, f1 = sk.ssd_pallas(x, b, cm, dt, a, d, s0, chunk=c, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=2e-4)

@@ -1,0 +1,161 @@
+"""Per-arch smoke tests (reduced configs) + structural model properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm, rwkv, ssm, transformer
+from repro.optim import AdamWConfig
+
+
+@pytest.fixture(scope="module")
+def opt_cfg():
+    return AdamWConfig(total_steps=10, warmup_steps=2)
+
+
+def _batch_for(cfg, rng, b=2, s=16):
+    if cfg.embedding_inputs:
+        return {
+            "embeddings": jnp.asarray(
+                rng.normal(size=(b, s, cfg.d_model)), jnp.float32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "mask": jnp.asarray(rng.random((b, s)) < 0.3),
+        }
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_train_step(arch, rng, opt_cfg):
+    """One forward/train step on CPU: output shapes + no NaNs (deliverable f)."""
+    cfg = configs.get(arch).reduced()
+    params, axes, opt_state = lm.init_all(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg, rng)
+    p2, o2, metrics = lm.train_step(params, opt_state, batch, cfg, None,
+                                    opt_cfg)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    changed = jax.tree.reduce(
+        lambda acc, pair: acc, [True])
+    flat0 = jax.tree.leaves(params)
+    flat1 = jax.tree.leaves(p2)
+    assert any(
+        (np.asarray(a) != np.asarray(b)).any()
+        for a, b in zip(flat0, flat1)
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if configs.get(a).has_decode])
+def test_arch_smoke_prefill_decode(arch, rng):
+    cfg = configs.get(arch).reduced()
+    params, _, _ = lm.init_all(jax.random.PRNGKey(0), cfg, opt=False)
+    batch = _batch_for(cfg, rng)
+    logits_last, caches = lm.prefill_step(params, batch, cfg, None)
+    assert logits_last.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits_last, -1).astype(jnp.int32)
+    logits, caches = lm.decode_step(
+        params, caches, {"token": tok, "pos": jnp.asarray(16, jnp.int32)},
+        cfg, None)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "zamba2-7b", "rwkv6-3b",
+                                  "qwen2.5-32b"])
+def test_prefill_decode_consistent_with_forward(arch, rng):
+    """Teacher-forced decode after prefill == full forward logits."""
+    cfg = configs.get(arch).reduced()
+    params, _, _ = lm.init_all(jax.random.PRNGKey(0), cfg, opt=False)
+    # S=16: divisible by the reduced ssm_chunk (8) for the hybrid arch
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    full_logits, _, _ = transformer.forward(params, toks, cfg, None)
+    _, caches = lm.prefill_step(params, {"tokens": toks[:, :8]}, cfg, None)
+    # caches for attention archs are sized to the prefill length; decode
+    # writes at pos >= that length require a bigger cache — re-init at 12
+    if "k" in (caches or {}):
+        big = transformer.init_decode_caches(cfg, 2, 16)
+        # keep non-KV state (hybrid conv/ssm) from the prefill
+        for key in caches:
+            if key not in ("k", "v"):
+                big[key] = caches[key]
+        big["k"] = big["k"].at[:, :, :8].set(caches["k"])
+        big["v"] = big["v"].at[:, :, :8].set(caches["v"])
+        caches = big
+    logits = None
+    for pos in range(8, 16):
+        logits, caches = transformer.decode_step(
+            params, caches, toks[:, pos], jnp.asarray(pos, jnp.int32), cfg,
+            None)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, -1]), atol=2e-3)
+
+
+def test_unrolled_equals_scanned(rng):
+    for arch in ("smollm-360m", "zamba2-7b", "rwkv6-3b", "olmoe-1b-7b"):
+        cfg = configs.get(arch).reduced()
+        cfg_u = dataclasses.replace(cfg, scan_layers=False)
+        params, _, _ = lm.init_all(jax.random.PRNGKey(0), cfg, opt=False)
+        batch = _batch_for(cfg, rng)
+        l1, _ = lm.loss_fn(params, batch, cfg, None)
+        l2, _ = lm.loss_fn(params, batch, cfg_u, None)
+        assert abs(float(l1) - float(l2)) < 1e-5, arch
+
+
+def test_flash_path_matches_reference_attention(rng):
+    cfg = configs.get("qwen3-0.6b").reduced()
+    cfg_flash = dataclasses.replace(cfg, use_flash=True)
+    params, _, _ = lm.init_all(jax.random.PRNGKey(0), cfg, opt=False)
+    batch = _batch_for(cfg, rng, s=32)
+    l0, _ = lm.loss_fn(params, batch, cfg, None)
+    l1, _ = lm.loss_fn(params, batch, cfg_flash, None)
+    assert abs(float(l0) - float(l1)) < 1e-3
+
+
+def test_mamba2_chunked_matches_decode(rng):
+    cfg = configs.get("zamba2-7b").reduced()
+    p, _ = ssm.mamba2_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.5, jnp.float32)
+    y_chunk, st = ssm.mamba2_apply(p, x, cfg, return_state=True)
+    state = ssm.mamba2_init_state(cfg, 2)
+    ys = []
+    for t in range(16):
+        y_t, state = ssm.mamba2_decode(p, x[:, t], state, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_chunk), atol=2e-4)
+    # prefill-collected state matches the sequentially-built one
+    np.testing.assert_allclose(np.asarray(st["ssm"]), np.asarray(state["ssm"]),
+                               atol=2e-4)
+
+
+def test_rwkv_train_matches_decode(rng):
+    cfg = configs.get("rwkv6-3b").reduced()
+    p, _ = rwkv.rwkv_block_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 12, cfg.d_model)) * 0.5, jnp.float32)
+    y_train = rwkv.rwkv_block_apply(p, x, cfg)
+    st = rwkv.rwkv_init_state(cfg, 2)
+    ys = []
+    for t in range(12):
+        y_t, st = rwkv.rwkv_block_decode(p, x[:, t], st, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_train), atol=1e-4)
+
+
+def test_param_counts_match_analytic():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        # structural check on the reduced config (full would allocate GBs)
+        red = cfg.reduced()
+        params, _, _ = lm.init_all(jax.random.PRNGKey(0), red, opt=False)
+        actual = sum(np.prod(p.shape) for p in jax.tree.leaves(params)
+                     if hasattr(p, "shape"))
+        analytic = red.n_params()
+        assert abs(actual - analytic) / max(actual, 1) < 0.35, \
+            (arch, actual, analytic)

@@ -1,0 +1,95 @@
+"""Feature extraction, scoring, migration: unit + hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import migration
+from repro.core.adaptive import AdaptConfig, AWAPartController
+from repro.core.features import FeatureSpace
+from repro.core.partition import PartitionState, greedy_balance, hash_partition
+from repro.core.scoring import distributed_joins, score_matrix, workload_stats
+
+
+def test_feature_extraction_fig1(small_lubm, space):
+    """Fig. 1: Q2 has 6 features (3 PO + 3 P), Q8 has 5 (2 PO + 3 P)."""
+    space.track_workload(small_lubm.base_workload())
+    q2 = space.query_features(small_lubm.queries["Q2"], fine=False)
+    q8 = space.query_features(small_lubm.queries["Q8"], fine=False)
+    assert len(q2) == 6
+    assert len(q8) == 5
+    inter = len(np.intersect1d(q2, q8))
+    union = len(np.union1d(q2, q8))
+    # paper: J_sim(Q2, Q8) = 3/8 -> distance 0.625
+    assert inter == 3 and union == 8
+
+
+def test_triple_owners_cover_everything(small_lubm, space):
+    owners = space.triple_owners()
+    assert owners.shape[0] == small_lubm.store.n_triples
+    assert (owners >= 0).all() and (owners < space.n_features).all()
+    sizes = space.feature_sizes(owners)
+    assert sizes.sum() == small_lubm.store.n_triples
+
+
+def test_tracking_po_splits_parent(small_lubm, space):
+    d = small_lubm.dictionary
+    p_takes = d.lookup("ub:takesCourse")
+    before = space.feature_sizes()[space.p_index(p_takes)]
+    idx = space.track_po(p_takes, small_lubm.named.grad_course0)
+    sizes = space.feature_sizes()
+    assert sizes[idx] > 0
+    assert sizes[space.p_index(p_takes)] == before - sizes[idx]
+
+
+def test_greedy_balance(rng):
+    sizes = rng.integers(1, 1000, size=60).astype(np.int64)
+    state = PartitionState(np.zeros(60, np.int32), sizes, 8)  # all on shard 0
+    greedy_balance(state, np.arange(60), tolerance=1.2)
+    assert state.imbalance() < 1.5
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_migration_conserves_triples(seed, n_shards):
+    rng = np.random.default_rng(seed)
+    n_feat = int(rng.integers(5, 40))
+    sizes = rng.integers(0, 500, size=n_feat).astype(np.int64)
+    old = hash_partition(sizes, n_shards, seed=seed)
+    new = old.copy()
+    moved = rng.random(n_feat) < 0.4
+    new.feature_to_shard[moved] = rng.integers(0, n_shards, moved.sum())
+    plan = migration.plan(old, new)
+    # conservation: total triples unchanged, per-feature single copy
+    assert old.shard_sizes().sum() == new.shard_sizes().sum() == sizes.sum()
+    # plan covers exactly the changed features
+    changed = set(np.where(old.feature_to_shard != new.feature_to_shard)[0])
+    assert {m[0] for m in plan.moves} == changed
+    assert plan.bytes == plan.n_triples * migration.TRIPLE_BYTES
+
+
+def test_extend_state_inherits_parent_shard():
+    sizes = np.array([10, 20, 30], np.int64)
+    state = PartitionState(np.array([0, 1, 2], np.int32), sizes, 3)
+    new_sizes = np.array([4, 20, 30, 6], np.int64)  # feature 3 split from 0
+    ext = migration.extend_state(state, new_sizes, parent_of_new=[0])
+    assert ext.feature_to_shard[3] == state.feature_to_shard[0]
+    assert ext.shard_sizes().sum() == new_sizes.sum()
+
+
+def test_scoring_prefers_colocation(small_lubm, space):
+    queries = small_lubm.base_workload()
+    space.track_workload(queries)
+    stats = workload_stats(queries, space)
+    sizes = space.feature_sizes()
+    state = hash_partition(sizes, 4, seed=1)
+    scores = score_matrix(stats, state)
+    assert scores.shape == (len(stats.key_features), 4)
+    # moving every key feature to its argmax shard must not increase the
+    # frequency-weighted distributed join count
+    dj0 = distributed_joins(stats, state)
+    new = state.copy()
+    for ki, k in enumerate(stats.key_features.tolist()):
+        new.feature_to_shard[k] = int(np.argmax(scores[ki]))
+    dj1 = distributed_joins(stats, new)
+    assert dj1 <= dj0

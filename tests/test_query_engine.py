@@ -1,0 +1,93 @@
+"""Distributed query engine: correctness vs single-shard oracle + invariance
+of results under repartitioning (the system's core correctness property)."""
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AWAPartController
+from repro.core.features import FeatureSpace
+from repro.core.partition import hash_partition
+from repro.query import engine, rewrite
+
+
+def _canon(bindings):
+    if not bindings:
+        return []
+    keys = sorted(bindings)
+    return sorted(map(tuple, np.stack([bindings[k] for k in keys],
+                                      axis=1).tolist()))
+
+
+@pytest.fixture()
+def sharded8(small_lubm, space):
+    space.track_workload(small_lubm.base_workload())
+    sizes = space.feature_sizes()
+    state = hash_partition(sizes, 8, seed=0)
+    return engine.ShardedStore(small_lubm.store, space, state)
+
+
+@pytest.fixture()
+def single(small_lubm, space):
+    space.track_workload(small_lubm.base_workload())
+    sizes = space.feature_sizes()
+    state = hash_partition(sizes, 1, seed=0)
+    return engine.ShardedStore(small_lubm.store, space, state)
+
+
+@pytest.mark.parametrize("qname", [f"Q{i}" for i in range(1, 15)]
+                         + [f"EQ{i}" for i in range(1, 11)])
+def test_all_queries_match_single_shard_oracle(small_lubm, sharded8, single,
+                                               qname):
+    q = small_lubm.queries[qname]
+    r8, s8 = engine.execute(q, sharded8)
+    r1, s1 = engine.execute(q, single)
+    assert _canon(r8) == _canon(r1)
+    assert s1.distributed_joins == 0          # single shard: no federation
+
+
+def test_q6_counts_students(small_lubm, single):
+    d = small_lubm.dictionary
+    n = small_lubm.store.count(None, d.lookup("rdf:type"),
+                               d.lookup("ub:Student"))
+    r, _ = engine.execute(small_lubm.queries["Q6"], single)
+    assert len(next(iter(r.values()))) == n
+
+
+def test_results_invariant_under_adaptation(small_lubm):
+    """Migration must never change query answers (only their cost)."""
+    space = FeatureSpace(small_lubm.store,
+                         type_predicate=small_lubm.dictionary.lookup("rdf:type"))
+    ctrl = AWAPartController(space, n_shards=6)
+    base = small_lubm.base_workload()
+    space.track_workload(base)
+    state0 = ctrl.initial_partition(base)
+    sh0 = engine.ShardedStore(small_lubm.store, space, state0)
+    results0 = {q.name: _canon(engine.execute(q, sh0)[0])
+                for q in small_lubm.extended_workload()}
+
+    state1, report = ctrl.adapt(
+        small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    sh1 = engine.ShardedStore(small_lubm.store, space, state1)
+    for q in small_lubm.extended_workload():
+        assert _canon(engine.execute(q, sh1)[0]) == results0[q.name], q.name
+    # shards still hold every triple exactly once
+    assert sum(sh1.shard_sizes()) == small_lubm.store.n_triples
+
+
+def test_federated_rewrite_mentions_service(small_lubm, space, sharded8):
+    q = small_lubm.queries["Q9"]
+    txt = rewrite.federated_sparql(q, space, sharded8.state,
+                                   small_lubm.dictionary)
+    assert "SELECT" in txt and "WHERE" in txt
+    counts = rewrite.service_counts(q, space, sharded8.state)
+    assert counts["local"] + counts["service"] == len(q.patterns)
+
+
+def test_adaptation_reduces_distributed_joins(lubm3):
+    space = FeatureSpace(lubm3.store,
+                         type_predicate=lubm3.dictionary.lookup("rdf:type"))
+    ctrl = AWAPartController(space, n_shards=8)
+    base = lubm3.base_workload()
+    space.track_workload(base)
+    ctrl.initial_partition(base)
+    _, report = ctrl.adapt(lubm3.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert report.dj_after <= report.dj_before
