@@ -2,27 +2,23 @@
 
 Same query set, but Q1's share of the workload rises to 50%; the adaptive
 partition should improve the frequency-weighted average (paper: ~17%).
+Runs through the ``repro.api`` service facade.
 """
 from __future__ import annotations
 
 import os
 from typing import List, Tuple
 
-from repro.core.adaptive import AWAPartController
-from repro.core.features import FeatureSpace
 from repro.graph import lubm
-from repro.launch.serve import experiment2
+from repro.launch.serve import build_system, experiment2
 
 SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "10"))
 SHARDS = int(os.environ.get("REPRO_BENCH_SHARDS", "8"))
 
 
 def run() -> List[Tuple[str, float, str]]:
-    ds = lubm.load(SCALE, 0)
-    space = FeatureSpace(ds.store,
-                         type_predicate=ds.dictionary.lookup("rdf:type"))
-    ctrl = AWAPartController(space, n_shards=SHARDS)
-    out = experiment2(ds, space, ctrl, hot_query="Q1", hot_share=0.5,
+    ds, svc = build_system(SCALE, SHARDS)
+    out = experiment2(ds, svc, hot_query="Q1", hot_share=0.5,
                       verbose=False)
     imp = (1 - out["t_adaptive"] / max(out["t_initial"], 1e-12)) * 100
     return [

@@ -1,52 +1,57 @@
 """Quickstart: partition a knowledge graph, query it, adapt to the workload.
 
+Everything goes through the public ``repro.api`` surface: a ``Partitioner``
+strategy (hash / wawpart / awapart, interchangeable), the ``KGService``
+session loop, and the ``PartitionedKG`` facade whose shard views update
+incrementally when the partition adapts.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.adaptive import AWAPartController
-from repro.core.features import FeatureSpace
+from repro.api import HashPartitioner, KGService
 from repro.graph import lubm
-from repro.query import engine, rewrite
+from repro.query import rewrite
 
 # 1. a small LUBM knowledge graph (2 universities, ~300k triples)
 ds = lubm.load(2, seed=0)
 print(f"knowledge graph: {ds.store.n_triples} triples, "
       f"{len(ds.queries)} benchmark queries")
 
-# 2. workload-aware initial partition over 4 shards
-space = FeatureSpace(ds.store, type_predicate=ds.dictionary.lookup("rdf:type"))
-ctrl = AWAPartController(space, n_shards=4)
+# 2. workload-aware adaptive partition over 4 shards (default strategy)
+svc = KGService.from_dataset(ds, n_shards=4)
 base = ds.base_workload()               # LUBM Q1..Q14
-space.track_workload(base)
-state = ctrl.initial_partition(base)
-sharded = engine.ShardedStore(ds.store, space, state)
-print(f"shards: {sharded.shard_sizes()} (imbalance {state.imbalance():.2f})")
+kg = svc.bootstrap(base)
+print(f"shards: {kg.shard_sizes()} (imbalance {kg.imbalance():.2f}, "
+      f"strategy={svc.partitioner.name})")
 
-# 3. run a query — federated across shards
+# 3. run a query — federated across shards, runtime recorded by the service
 q9 = ds.queries["Q9"]
-bindings, stats = engine.execute(q9, sharded)
+bindings, stats = svc.query(q9)
 print(f"\nQ9 -> {stats.rows} rows, {stats.distributed_joins} distributed "
       f"joins, {stats.bytes_shipped / 1e3:.1f} KB shipped")
 print("\nfederated rewrite of Q9:")
-print(rewrite.federated_sparql(q9, space, state, ds.dictionary))
+print(rewrite.federated_sparql(q9, svc.space, kg.state, ds.dictionary))
 
-# 4. the workload changes: 10 new queries arrive -> adapt
+# 4. the workload changes: 10 new queries arrive -> adapt incrementally
 new_queries = ds.workload([f"EQ{i}" for i in range(1, 11)])
-times0, _ = engine.run_workload(new_queries, sharded)
+times0, _ = svc.run_workload(new_queries)
 
-def measure(cand):
-    sh = engine.ShardedStore(ds.store, space, cand)
-    return engine.workload_average_time(list(ctrl.workload.values()), sh)
-
-state2, report = ctrl.adapt(new_queries, measure=measure)
+report = svc.adapt(new_queries)
 print(f"\nadaptation: accepted={report.accepted}, "
-      f"distributed joins {report.dj_before:.0f} -> {report.dj_after:.0f}, "
+      f"{report.n_clusters} query clusters, distributed joins "
+      f"{report.dj_before:.0f} -> {report.dj_after:.0f}, "
       f"{report.plan.summary()}")
 
-sharded2 = engine.ShardedStore(ds.store, space, state2)
-times1, _ = engine.run_workload(new_queries, sharded2)
+times1, _ = svc.run_workload(new_queries)   # same facade, views updated
 avg0 = np.mean(list(times0.values())) * 1e3
 avg1 = np.mean(list(times1.values())) * 1e3
 print(f"new-query avg runtime: {avg0:.1f} ms -> {avg1:.1f} ms "
       f"({(1 - avg1 / avg0) * 100:+.1f}%)")
+
+# 5. strategies are pluggable: same service loop, hash baseline
+hash_svc = KGService.from_dataset(ds, n_shards=4,
+                                  partitioner=HashPartitioner())
+hash_svc.bootstrap()
+t_hash = hash_svc.workload_average_time(new_queries) * 1e3
+print(f"hash-partition baseline on the new queries: {t_hash:.1f} ms")

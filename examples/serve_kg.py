@@ -1,10 +1,11 @@
 """End-to-end driver (the paper's kind): serve a partitioned knowledge graph
 with batched queries while the workload drifts, adapting online.
 
-Simulates the Fig.-6 deployment: queries arrive in batches with a drifting
-mix; the master node monitors per-query runtimes (TM) and triggers the Fig.-5
-adaptation when the average degrades past the threshold, migrating triples
-between shards in the background.
+Simulates the Fig.-6 deployment through ``repro.api``: queries arrive in
+batches with a drifting mix; the ``KGService`` monitors per-query runtimes
+(TM) and triggers the Fig.-5 adaptation when the average degrades past the
+threshold, applying the migration to the live shard views as an incremental
+delta.
 
     PYTHONPATH=src python examples/serve_kg.py [--batches 12]
 """
@@ -13,10 +14,9 @@ import time
 
 import numpy as np
 
-from repro.core.adaptive import AdaptConfig, AWAPartController
-from repro.core.features import FeatureSpace
+from repro.api import AWAPartitioner, KGService
+from repro.core.adaptive import AdaptConfig
 from repro.graph import lubm
-from repro.query import engine
 
 
 def main() -> None:
@@ -30,17 +30,14 @@ def main() -> None:
     rng = np.random.default_rng(0)
     t0 = time.time()
     ds = lubm.load(args.universities, 0)
-    space = FeatureSpace(ds.store,
-                         type_predicate=ds.dictionary.lookup("rdf:type"))
-    ctrl = AWAPartController(space, n_shards=args.shards,
-                             config=AdaptConfig(adapt_threshold=1.10))
+    svc = KGService.from_dataset(
+        ds, args.shards,
+        AWAPartitioner(AdaptConfig(adapt_threshold=1.10)))
     base = ds.base_workload()
-    space.track_workload(base)
-    state = ctrl.initial_partition(base)
-    sharded = engine.ShardedStore(ds.store, space, state)
+    svc.bootstrap(base)
     print(f"[{time.time()-t0:5.1f}s] serving {ds.store.n_triples} triples on "
           f"{args.shards} shards")
-    ctrl._baseline_avg = None
+    svc.reset_baseline()      # no reference yet: first trigger adapts
     adaptations = 0
 
     for batch_i in range(args.batches):
@@ -55,32 +52,24 @@ def main() -> None:
 
         t_batch = time.perf_counter()
         for q in batch_queries:
-            _, st = engine.execute(q, sharded)
-            ctrl.observe(q, st.modeled_time())
+            svc.query(q)
         wall = time.perf_counter() - t_batch
-        avg_ms = ctrl.avg_execution_time() * 1e3
+        avg_ms = svc.avg_execution_time() * 1e3
 
         marker = ""
-        if batch_i >= 1 and ctrl.should_adapt():
-            def measure(cand):
-                sh = engine.ShardedStore(ds.store, space, cand)
-                return engine.workload_average_time(
-                    list(ctrl.workload.values()), sh)
-
-            state, report = ctrl.adapt([], measure=measure)
-            if report.accepted:
+        if batch_i >= 1:
+            report = svc.maybe_adapt()
+            if report is not None and report.accepted:
                 adaptations += 1
-                sharded = engine.ShardedStore(ds.store, space, state)
                 marker = (f"  << ADAPTED: dj {report.dj_before:.0f}->"
                           f"{report.dj_after:.0f}, {report.plan.summary()}")
-                ctrl.exec_times.clear()   # fresh TM window post-migration
-                ctrl._baseline_avg = report.t_new
         print(f"[batch {batch_i:2d}] drift={drift:.1f} "
               f"avg={avg_ms:6.1f} ms wall={wall:5.2f}s{marker}")
 
     print(f"\nserved {args.batches * args.queries_per_batch} queries, "
           f"{adaptations} adaptation(s), final shards: "
-          f"{sharded.shard_sizes()}")
+          f"{svc.kg.shard_sizes()} "
+          f"({svc.kg.view_rebuilds} shard-view rebuilds total)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate + end-to-end smoke of the public repro.api surface.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: examples/quickstart.py (KGService + all strategies) =="
+python examples/quickstart.py
+
+echo "CI OK"

@@ -1,0 +1,25 @@
+"""repro.api — the public partitioning-service surface.
+
+Everything callers need to serve a partitioned knowledge graph:
+
+* strategies: :class:`Partitioner` protocol with :class:`HashPartitioner`,
+  :class:`WawPartitioner`, :class:`AWAPartitioner`;
+* :class:`PartitionedKG` — shard-view facade with incremental delta updates;
+* :class:`KGService` — the Fig.-6 session loop
+  (``bootstrap / query / observe / maybe_adapt / reset_baseline``).
+
+See ``docs/api.md`` for the quickstart.
+"""
+from repro.api.facade import PartitionedKG
+from repro.api.partitioners import (AWAPartitioner, HashPartitioner,
+                                    Partitioner, WawPartitioner)
+from repro.api.service import KGService
+
+__all__ = [
+    "AWAPartitioner",
+    "HashPartitioner",
+    "KGService",
+    "PartitionedKG",
+    "Partitioner",
+    "WawPartitioner",
+]

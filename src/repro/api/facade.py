@@ -1,0 +1,172 @@
+"""PartitionedKG — the partitioned-knowledge-graph facade.
+
+Owns the global ``TripleStore``, the ``FeatureSpace`` and the current
+``PartitionState``, and materializes per-shard ``TripleStore`` views **once**.
+Thereafter every layout change arrives as a ``MigrationPlan``-shaped delta
+(a candidate ``PartitionState`` over the same feature universe) and only the
+shards actually touched by moved features are re-indexed; untouched shard
+views are reused as-is.
+
+Candidate evaluation (``measure_candidate``) never touches the views at all:
+it re-prices cached layout-invariant query profiles
+(``engine.QueryProfile``) under the candidate's triple->shard map — pure
+bincount arithmetic instead of re-executing the workload's joins per
+candidate cut, which was the hot path of every adaptation round.
+
+The object is duck-compatible with ``repro.query.engine.ShardedStore``
+(``.space`` / ``.state`` / ``.shards``), so ``engine.execute`` and the
+workload helpers run against it unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import migration
+from repro.core.features import FeatureSpace
+from repro.core.partition import PartitionState
+from repro.graph.triples import TripleStore
+from repro.query import engine
+from repro.query.pattern import Query
+
+
+class PartitionedKG:
+    """Per-shard views of a feature-partitioned KG with incremental updates."""
+
+    def __init__(self, store: TripleStore, space: FeatureSpace,
+                 state: PartitionState, owners: np.ndarray | None = None):
+        self.store = store
+        self.space = space
+        self.state = state
+        self.owners = space.triple_owners() if owners is None else owners
+        self._triple_shard = state.triple_shards(self.owners).astype(np.int32)
+        self._rows: List[np.ndarray] = [
+            np.flatnonzero(self._triple_shard == s)
+            for s in range(state.n_shards)]
+        self._views: List[Optional[TripleStore]] = [None] * state.n_shards
+        self.view_rebuilds = 0         # telemetry: shard views (re)built
+        # layout-invariant query profiles, keyed by query name (+ patterns,
+        # so a re-defined query under the same name is re-profiled)
+        self._profiles: Dict[str, Tuple[tuple, engine.QueryProfile]] = {}
+        self._rebuild_feature_index()
+
+    # ------------------------------------------------------------------ #
+    # engine compatibility
+    # ------------------------------------------------------------------ #
+    @property
+    def n_shards(self) -> int:
+        return self.state.n_shards
+
+    @property
+    def shards(self) -> List[TripleStore]:
+        """Materialized per-shard views (lazily built, cached until a delta
+        touches the shard)."""
+        for s in range(self.state.n_shards):
+            if self._views[s] is None:
+                self._views[s] = TripleStore(
+                    self.store.triples[self._rows[s]], self.store.dictionary)
+                self.view_rebuilds += 1
+        return list(self._views)
+
+    def shard_sizes(self) -> List[int]:
+        return [len(r) for r in self._rows]
+
+    # ------------------------------------------------------------------ #
+    # owner-feature row index (CSR over triples grouped by owner feature)
+    # ------------------------------------------------------------------ #
+    def _rebuild_feature_index(self) -> None:
+        order = np.argsort(self.owners, kind="stable").astype(np.int64)
+        nf = len(self.state.feature_to_shard)
+        self._feat_order = order
+        self._feat_starts = np.searchsorted(
+            self.owners[order], np.arange(nf + 1))
+
+    def _rows_of(self, feats: np.ndarray) -> np.ndarray:
+        parts = [self._feat_order[self._feat_starts[f]:self._feat_starts[f + 1]]
+                 for f in feats.tolist()]
+        return (np.concatenate(parts) if parts
+                else np.empty(0, dtype=np.int64))
+
+    # ------------------------------------------------------------------ #
+    # feature-universe growth (adaptive PO-split tracking)
+    # ------------------------------------------------------------------ #
+    def sync_universe(self) -> None:
+        """Absorb newly-tracked PO features from the FeatureSpace.
+
+        A split PO feature's triples stay on the parent's shard (ownership
+        split, no data movement), so the triple->shard mapping — and every
+        shard view — is unchanged; only owners/sizes/state are re-derived."""
+        if self.space.n_features == len(self.state.feature_to_shard):
+            return
+        self.state, self.owners = migration.extend_for_space(self.state,
+                                                             self.space)
+        self._rebuild_feature_index()
+
+    # ------------------------------------------------------------------ #
+    # incremental deltas
+    # ------------------------------------------------------------------ #
+    def _apply(self, new_state: PartitionState) -> None:
+        assert len(new_state.feature_to_shard) == \
+            len(self.state.feature_to_shard), \
+            "sync_universe() before applying a delta over a grown universe"
+        changed = np.flatnonzero(
+            self.state.feature_to_shard != new_state.feature_to_shard)
+        rows = self._rows_of(changed)
+        old_shards = self._triple_shard[rows]
+        new_shards = new_state.feature_to_shard[self.owners[rows]] \
+            .astype(np.int32)
+        touched = (np.unique(np.concatenate([old_shards, new_shards])).tolist()
+                   if len(rows) else [])
+        self._triple_shard[rows] = new_shards
+        for s in touched:
+            self._rows[s] = np.flatnonzero(self._triple_shard == s)
+            self._views[s] = None          # re-indexed lazily on next access
+        self.state = new_state
+
+    # ------------------------------------------------------------------ #
+    # public delta API
+    # ------------------------------------------------------------------ #
+    def profile(self, q: Query) -> engine.QueryProfile:
+        """Layout-invariant execution profile of ``q`` (cached; one real
+        execution against the global store on first use)."""
+        pats = tuple(q.patterns)
+        entry = self._profiles.get(q.name)
+        if entry is None or entry[0] != pats:
+            entry = (pats, engine.profile_query(q, self.store))
+            self._profiles[q.name] = entry
+        return entry[1]
+
+    def measure_candidate(self, cand: PartitionState,
+                          queries: Sequence[Query], net=None) -> float:
+        """Average modeled workload time under ``cand`` — pure federation
+        re-accounting over cached query profiles. No joins are re-executed,
+        no shard view is touched: only the candidate's triple->shard map is
+        derived (one gather) and each profiled pattern re-priced."""
+        self.sync_universe()
+        triple_shard = cand.feature_to_shard[self.owners].astype(np.int32)
+        net = net or engine.NetworkModel()
+        num = den = 0.0
+        for q in queries:
+            st = engine.stats_from_profile(q, self.profile(q), self.space,
+                                           cand, triple_shard)
+            num += st.modeled_time(net) * q.frequency
+            den += q.frequency
+        return num / max(den, 1e-12)
+
+    def commit(self, new_state: PartitionState) -> migration.MigrationPlan:
+        """Adopt ``new_state``; returns the migration delta that was applied.
+        Only shards touched by moved features are re-indexed."""
+        self.sync_universe()
+        plan = migration.plan(self.state, new_state)
+        self._apply(new_state)
+        return plan
+
+    # ------------------------------------------------------------------ #
+    def imbalance(self) -> float:
+        return self.state.imbalance()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PartitionedKG(n_triples={self.store.n_triples}, "
+                f"n_shards={self.n_shards}, "
+                f"n_features={len(self.state.feature_to_shard)})")

@@ -1,0 +1,110 @@
+"""Pluggable partitioning strategies behind one ``Partitioner`` protocol.
+
+Three interchangeable strategies cover the paper's comparison axes:
+
+* ``HashPartitioner``  — workload-oblivious feature hashing (the baseline
+  non-workload-aware systems use),
+* ``WawPartitioner``   — WawPart-style workload-aware *initial* partition
+  ([21] in the paper), no adaptivity,
+* ``AWAPartitioner``   — the full adaptive Fig.-5 loop; ``adapt`` prices
+  candidate cuts against a live ``PartitionedKG``'s cached query profiles
+  instead of re-materializing a ShardedStore and re-executing the workload
+  per candidate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
+from repro.core.features import FeatureSpace
+from repro.core.partition import (PartitionState, balanced_partition,
+                                  hash_partition)
+from repro.query.pattern import Query
+
+from repro.api.facade import PartitionedKG
+
+
+@runtime_checkable
+class Partitioner(Protocol):
+    """Strategy protocol: map (feature space, shard count, workload) to a
+    ``PartitionState``. Adaptive strategies additionally expose
+    ``adapt(kg, new_queries)`` and a ``controller``."""
+
+    name: str
+
+    def partition(self, space: FeatureSpace, n_shards: int,
+                  workload: Sequence[Query] = ()) -> PartitionState:
+        ...
+
+
+class HashPartitioner:
+    """Feature-hash baseline; ignores the workload entirely."""
+
+    name = "hash"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def partition(self, space: FeatureSpace, n_shards: int,
+                  workload: Sequence[Query] = ()) -> PartitionState:
+        return hash_partition(space.feature_sizes(), n_shards, self.seed)
+
+
+class WawPartitioner:
+    """Workload-aware initial partition (WawPart [21]): cluster the workload
+    once and co-locate each cluster's features; never re-adapts."""
+
+    name = "wawpart"
+
+    def __init__(self, config: AdaptConfig | None = None):
+        self.config = config
+
+    def _initial(self, space: FeatureSpace, n_shards: int,
+                 workload: Sequence[Query]) -> Tuple[PartitionState,
+                                                     AWAPartController]:
+        ctrl = AWAPartController(space, n_shards, self.config)
+        workload = list(workload)
+        if not workload:     # nothing to be aware of: balanced round-robin
+            ctrl.state = balanced_partition(space.feature_sizes(), n_shards)
+            return ctrl.state, ctrl
+        space.track_workload(workload)
+        return ctrl.initial_partition(workload), ctrl
+
+    def partition(self, space: FeatureSpace, n_shards: int,
+                  workload: Sequence[Query] = ()) -> PartitionState:
+        state, _ = self._initial(space, n_shards, workload)
+        return state
+
+
+class AWAPartitioner(WawPartitioner):
+    """WawPart initial partition + the adaptive Fig.-5 control loop."""
+
+    name = "awapart"
+
+    def __init__(self, config: AdaptConfig | None = None):
+        super().__init__(config)
+        self.controller: Optional[AWAPartController] = None
+
+    def partition(self, space: FeatureSpace, n_shards: int,
+                  workload: Sequence[Query] = ()) -> PartitionState:
+        state, self.controller = self._initial(space, n_shards, workload)
+        return state
+
+    def adapt(self, kg: PartitionedKG, new_queries: Sequence[Query] = (),
+              net=None, measure=None) -> Tuple[PartitionState, AdaptReport]:
+        """One adaptation round against the live facade.
+
+        Each candidate cut is priced via the facade's cached query profiles
+        (no joins re-executed, no views touched); the controller's
+        accept/revert guard then commits the winner (or nothing) as an
+        incremental delta. ``measure`` overrides the objective (``None`` =
+        modeled workload-average time from the profiles)."""
+        assert self.controller is not None, "partition() first"
+        ctrl = self.controller
+        if measure is None:
+            def measure(cand: PartitionState) -> float:
+                return kg.measure_candidate(
+                    cand, list(ctrl.workload.values()), net)
+        state, report = ctrl.adapt(list(new_queries), measure=measure)
+        kg.commit(state)
+        return state, report

@@ -1,0 +1,137 @@
+"""KGService — the master-node session API (paper Fig. 6).
+
+One object owns the whole serving loop: bootstrap a partition with any
+``Partitioner`` strategy, execute federated queries, monitor per-query
+runtimes (TM), and — for adaptive strategies — trigger/apply the Fig.-5
+adaptation. Drivers, examples, benchmarks, and tests orchestrate through
+this facade only; controller internals are never reached into.
+
+    svc = KGService.from_dataset(ds, n_shards=8)
+    kg = svc.bootstrap(ds.base_workload())
+    bindings, stats = svc.query(ds.queries["Q9"])
+    report = svc.maybe_adapt(new_queries)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
+from repro.core.features import FeatureSpace
+from repro.graph.triples import TripleStore
+from repro.query import engine
+from repro.query.pattern import Query
+
+from repro.api.facade import PartitionedKG
+from repro.api.partitioners import AWAPartitioner, Partitioner
+
+
+class KGService:
+    """Session facade over store + feature space + partitioner + shard views."""
+
+    def __init__(self, store: TripleStore, n_shards: int,
+                 partitioner: Partitioner | None = None, *,
+                 type_predicate: int | None = None,
+                 config: AdaptConfig | None = None,
+                 net: engine.NetworkModel | None = None):
+        self.store = store
+        self.n_shards = n_shards
+        self.partitioner = partitioner or AWAPartitioner(config)
+        self.space = FeatureSpace(store, type_predicate=type_predicate)
+        self.net = net
+        self.kg: Optional[PartitionedKG] = None
+        self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
+
+    @classmethod
+    def from_dataset(cls, ds, n_shards: int,
+                     partitioner: Partitioner | None = None,
+                     **kwargs) -> "KGService":
+        """Build from a dataset exposing ``.store`` and ``.dictionary``
+        (e.g. ``repro.graph.lubm.load``)."""
+        return cls(ds.store, n_shards, partitioner,
+                   type_predicate=ds.dictionary.lookup("rdf:type"), **kwargs)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def controller(self) -> Optional[AWAPartController]:
+        """The adaptive control plane, if the strategy has one."""
+        return getattr(self.partitioner, "controller", None)
+
+    def bootstrap(self, workload: Sequence[Query] = ()) -> PartitionedKG:
+        """Partition with the configured strategy and materialize the shard
+        views (once — all later layout changes are incremental deltas)."""
+        state = self.partitioner.partition(self.space, self.n_shards,
+                                           list(workload))
+        self.kg = PartitionedKG(self.store, self.space, state)
+        return self.kg
+
+    # ------------------------------------------------------------------ #
+    # serving + monitoring (TM)
+    # ------------------------------------------------------------------ #
+    def query(self, q: Query) -> Tuple[Dict[int, np.ndarray],
+                                       engine.ExecStats]:
+        """Execute one federated query and record its runtime."""
+        assert self.kg is not None, "bootstrap() first"
+        bindings, stats = engine.execute(q, self.kg, self.net)
+        self.observe(q, stats.modeled_time(self.net))
+        return bindings, stats
+
+    def run_workload(self, queries: Sequence[Query]):
+        assert self.kg is not None, "bootstrap() first"
+        return engine.run_workload(queries, self.kg, self.net)
+
+    def workload_average_time(self, queries: Sequence[Query]) -> float:
+        assert self.kg is not None, "bootstrap() first"
+        return engine.workload_average_time(queries, self.kg, self.net)
+
+    def observe(self, query: Query, runtime: float) -> None:
+        ctrl = self.controller
+        if ctrl is not None:
+            ctrl.observe(query, runtime)
+        else:
+            self._times.setdefault(query.name, []).append(runtime)
+
+    def avg_execution_time(self) -> float:
+        ctrl = self.controller
+        if ctrl is not None:
+            return ctrl.avg_execution_time()
+        per_q = [float(np.mean(v)) for v in self._times.values() if v]
+        return float(np.mean(per_q)) if per_q else 0.0
+
+    # ------------------------------------------------------------------ #
+    # adaptation
+    # ------------------------------------------------------------------ #
+    def should_adapt(self) -> bool:
+        ctrl = self.controller
+        return ctrl is not None and ctrl.should_adapt()
+
+    def adapt(self, new_queries: Sequence[Query] = ()) -> AdaptReport:
+        """Run one adaptation round now (strategy must be adaptive). On
+        acceptance the TM window restarts with the measured new baseline."""
+        assert self.kg is not None, "bootstrap() first"
+        if not hasattr(self.partitioner, "adapt"):
+            raise TypeError(f"partitioner '{self.partitioner.name}' is not "
+                            "adaptive; use AWAPartitioner")
+        _, report = self.partitioner.adapt(self.kg, list(new_queries),
+                                           net=self.net)
+        ctrl = self.controller
+        if report.accepted and ctrl is not None:
+            ctrl.exec_times.clear()            # fresh TM window post-migration
+            ctrl.reset_baseline(report.t_new)
+        return report
+
+    def maybe_adapt(self, new_queries: Sequence[Query] = (),
+                    ) -> Optional[AdaptReport]:
+        """Adapt only if the monitored average degraded past the threshold
+        (or no baseline exists yet). Returns None when no round was run."""
+        if not self.should_adapt():
+            return None
+        return self.adapt(new_queries)
+
+    def reset_baseline(self, value: Optional[float] = None) -> None:
+        """Public baseline control: clear (None) to force the next
+        ``maybe_adapt`` to run a round, or pin to a measured average."""
+        ctrl = self.controller
+        if ctrl is not None:
+            ctrl.reset_baseline(value)

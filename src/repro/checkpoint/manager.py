@@ -29,7 +29,9 @@ _SEP = "__"
 
 
 def _flatten(tree) -> Tuple[Dict[str, Any], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; tree_util spelling
+    # works across the versions we support
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))

@@ -1,0 +1,56 @@
+"""Version-tolerant aliases for jax APIs that moved between releases.
+
+The codebase targets the current jax surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); older jax (< 0.5) spells these
+``jax.experimental.shard_map.shard_map(check_rep=...)``, ``with mesh:`` and
+has no axis types. Routing every use through this module keeps the rest of
+the code on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for the block."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh            # Mesh is itself a context manager on older jax
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict (older jax returns a
+    one-element list of dicts, one per executable)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (renamed from ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

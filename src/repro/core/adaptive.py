@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core import hac, migration
 from repro.core.features import FeatureSpace
-from repro.core.partition import PartitionState, greedy_balance
+from repro.core.partition import (PartitionState, balanced_partition,
+                                  greedy_balance)
 from repro.core.scoring import (ScoreWeights, WorkloadStats,
                                 distributed_joins, score_matrix,
                                 workload_stats)
@@ -89,6 +90,13 @@ class AWAPartController:
         cur = self.avg_execution_time()
         return cur > self.config.adapt_threshold * self._baseline_avg
 
+    def reset_baseline(self, value: Optional[float] = None) -> None:
+        """Set (or clear, with None) the T_base reference of Fig.-5 line 2.
+
+        Clearing forces the next ``should_adapt`` to fire; setting it to the
+        post-migration average starts a fresh monitoring window."""
+        self._baseline_avg = value
+
     # ------------------------------------------------------------------ #
     # clustering (lines 4-5)
     # ------------------------------------------------------------------ #
@@ -116,7 +124,7 @@ class AWAPartController:
     # ------------------------------------------------------------------ #
     def _assign(self, queries: Sequence[Query], base: PartitionState,
                 cut: Optional[float] = None,
-                ) -> Tuple[PartitionState, WorkloadStats]:
+                ) -> Tuple[PartitionState, WorkloadStats, int]:
         """Lines 6–23: place feature groups (query clusters) as units, under a
         hard balance cap; oversized groups degrade to per-feature placement."""
         stats = workload_stats(queries, self.space)
@@ -178,7 +186,7 @@ class AWAPartController:
         # proximity + balance for non-workload features (lines 16-23)
         movable = np.arange(len(sizes))[~key_set]
         greedy_balance(new, movable, self.config.balance_tolerance)
-        return new, stats
+        return new, stats, len(groups)
 
     # ------------------------------------------------------------------ #
     # public API
@@ -187,18 +195,10 @@ class AWAPartController:
         """WawPart-style initial workload-aware partition ([21])."""
         for q in queries:
             self.workload[q.name] = q
-        sizes = self.space.feature_sizes()
         # start from round-robin by size (balanced, workload-agnostic) ...
-        order = np.argsort(-sizes)
-        f2s = np.zeros(len(sizes), dtype=np.int32)
-        shard_load = np.zeros(self.n_shards, dtype=np.int64)
-        for f in order.tolist():
-            dst = int(np.argmin(shard_load))
-            f2s[f] = dst
-            shard_load[dst] += sizes[f]
-        base = PartitionState(f2s, sizes, self.n_shards)
+        base = balanced_partition(self.space.feature_sizes(), self.n_shards)
         # ... then pull workload features together
-        state, _ = self._assign(list(self.workload.values()), base)
+        state, _, _ = self._assign(list(self.workload.values()), base)
         self.state = state
         return state
 
@@ -219,24 +219,19 @@ class AWAPartController:
         self._baseline_avg = t_base if t_base is not None else self._baseline_avg
 
         # line 3: track new PO features; ownership split grows the universe
-        old_f = self.space.n_features
         self.space.track_workload(queries)
-        owners = self.space.triple_owners()
-        sizes = self.space.feature_sizes(owners)
-        parents = [self.space.p_index(self.space.key(i)[1])
-                   for i in range(old_f, self.space.n_features)]
-        cur = migration.extend_state(self.state, sizes, parents)
+        cur, _ = migration.extend_for_space(self.state, self.space)
 
         # lines 4-23, once per candidate cut; the measured objective picks
         # the winning candidate (beyond-paper extension of the line-24 guard)
         cuts = self.config.cut_candidates or (self.config.cut_distance,)
         best = None
         for cut in cuts:
-            cand, stats = self._assign(queries, cur, cut=cut)
+            cand, stats, ncl = self._assign(queries, cur, cut=cut)
             obj = measure(cand) if measure else distributed_joins(stats, cand)
             if best is None or obj < best[0]:
-                best = (obj, cand, stats, cut)
-        obj_new, new, stats, chosen_cut = best
+                best = (obj, cand, stats, cut, ncl)
+        obj_new, new, stats, chosen_cut, n_clusters = best
 
         dj_before = distributed_joins(stats, cur)
         dj_after = distributed_joins(stats, new)
@@ -255,4 +250,4 @@ class AWAPartController:
         return self.state, AdaptReport(
             accepted=accepted, plan=mplan, dj_before=dj_before,
             dj_after=dj_after, t_base=t_base, t_new=t_new,
-            n_clusters=0, chosen_cut=chosen_cut)
+            n_clusters=n_clusters, chosen_cut=chosen_cut)

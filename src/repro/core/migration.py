@@ -42,6 +42,22 @@ def plan(old: PartitionState, new: PartitionState) -> MigrationPlan:
                          bytes=n_triples * TRIPLE_BYTES)
 
 
+def extend_for_space(state: PartitionState, space,
+                     ) -> Tuple[PartitionState, np.ndarray]:
+    """Extend ``state`` to ``space``'s grown feature universe.
+
+    The single place encoding the PO-split parent rule (a new PO feature
+    inherits its parent P feature's shard) — both the controller's adapt
+    round and the PartitionedKG facade go through it, so their extended
+    states are identical by construction. Returns (state, triple owners)."""
+    old_nf = len(state.feature_to_shard)
+    owners = space.triple_owners()
+    sizes = space.feature_sizes(owners)
+    parents = [space.p_index(space.key(i)[1])
+               for i in range(old_nf, space.n_features)]
+    return extend_state(state, sizes, parents), owners
+
+
 def extend_state(state: PartitionState, new_sizes: np.ndarray,
                  parent_of_new: List[int]) -> PartitionState:
     """Grow a state with newly-tracked PO features.

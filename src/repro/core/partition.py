@@ -45,6 +45,20 @@ def hash_partition(feature_sizes: np.ndarray, n_shards: int,
     return PartitionState(f2s, np.asarray(feature_sizes, np.int64), n_shards)
 
 
+def balanced_partition(feature_sizes: np.ndarray,
+                       n_shards: int) -> PartitionState:
+    """Workload-agnostic LPT round-robin: biggest feature to the least-loaded
+    shard. The starting point both WawPart and AWAPart refine."""
+    sizes = np.asarray(feature_sizes, np.int64)
+    f2s = np.zeros(len(sizes), dtype=np.int32)
+    shard_load = np.zeros(n_shards, dtype=np.int64)
+    for f in np.argsort(-sizes).tolist():
+        dst = int(np.argmin(shard_load))
+        f2s[f] = dst
+        shard_load[dst] += sizes[f]
+    return PartitionState(f2s, sizes, n_shards)
+
+
 def greedy_balance(state: PartitionState, movable: np.ndarray,
                    tolerance: float = 1.10) -> List[tuple]:
     """Fig.-5 lines 20–23: repeatedly move the largest movable feature from the

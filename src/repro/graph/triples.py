@@ -94,29 +94,36 @@ class TripleStore:
     def match(self, s: Optional[int], p: Optional[int],
               o: Optional[int]) -> np.ndarray:
         """Return (M, 3) triples matching the pattern; None = wildcard."""
-        t = self.triples
+        return self.triples[self.match_indices(s, p, o)]
+
+    def match_indices(self, s: Optional[int], p: Optional[int],
+                      o: Optional[int]) -> np.ndarray:
+        """Row indices (into ``triples``) matching the pattern; None = wildcard.
+
+        The permutation values in the sorted indexes *are* row ids, so
+        ``match`` is just this plus a gather."""
         if s is not None and p is None and o is None:
             lo, hi = self._range(self.spo, (S,), (s,))
-            return t[self.spo[lo:hi]]
+            return self.spo[lo:hi]
         if s is not None and p is not None and o is None:
             lo, hi = self._range(self.spo, (S, P), (s, p))
-            return t[self.spo[lo:hi]]
+            return self.spo[lo:hi]
         if s is not None and p is not None and o is not None:
             lo, hi = self._range(self.spo, (S, P, O), (s, p, o))
-            return t[self.spo[lo:hi]]
+            return self.spo[lo:hi]
         if p is not None and o is None and s is None:
             lo, hi = self._range(self.pos, (P,), (p,))
-            return t[self.pos[lo:hi]]
+            return self.pos[lo:hi]
         if p is not None and o is not None and s is None:
             lo, hi = self._range(self.pos, (P, O), (p, o))
-            return t[self.pos[lo:hi]]
+            return self.pos[lo:hi]
         if o is not None and s is None and p is None:
             lo, hi = self._range(self.osp, (O,), (o,))
-            return t[self.osp[lo:hi]]
+            return self.osp[lo:hi]
         if o is not None and s is not None and p is None:
             lo, hi = self._range(self.osp, (O, S), (o, s))
-            return t[self.osp[lo:hi]]
-        return t  # fully unbound
+            return self.osp[lo:hi]
+        return np.arange(self.n_triples, dtype=np.int64)  # fully unbound
 
     def count(self, s: Optional[int], p: Optional[int], o: Optional[int]) -> int:
         return int(self.match(s, p, o).shape[0])

@@ -18,6 +18,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -123,7 +125,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, q_offset: int = 0,
             pltpu.VMEM((bq,), jnp.float32),        # running max
             pltpu.VMEM((bq,), jnp.float32),        # running sum
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

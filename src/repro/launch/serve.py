@@ -1,10 +1,12 @@
 """KG serving driver — the paper's own system end-to-end (Fig. 6).
 
-Master-node loop: LUBM dataset -> workload-aware initial partition (WawPart
-[21]) -> serve federated queries over the shards -> monitor per-query
-runtimes (TM) -> on workload change, run the Fig.-5 adaptation -> migrate
-triples -> keep serving. ``--experiment 1|2`` reproduces the paper's two
-evaluations.
+Master-node loop via the ``repro.api`` service facade: LUBM dataset ->
+workload-aware initial partition (WawPart [21]) -> serve federated queries
+over the shards -> monitor per-query runtimes (TM) -> on workload change,
+run the Fig.-5 adaptation as an incremental shard-view delta -> keep
+serving. ``--experiment 1|2`` reproduces the paper's two evaluations, and
+``--partitioner hash|wawpart|awapart`` swaps the strategy under the same
+harness.
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
       --experiment 1
@@ -13,79 +15,82 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
-from repro.core.adaptive import AdaptConfig, AWAPartController
-from repro.core.features import FeatureSpace
+from repro.api import (AWAPartitioner, HashPartitioner, KGService,
+                       WawPartitioner)
+from repro.core.adaptive import AdaptConfig
 from repro.graph import lubm
-from repro.query import engine, rewrite
+from repro.query import rewrite
+
+PARTITIONERS = {"hash": HashPartitioner, "wawpart": WawPartitioner,
+                "awapart": AWAPartitioner}
 
 
 def build_system(universities: int, shards: int, seed: int = 0,
-                 config: AdaptConfig | None = None):
+                 config: AdaptConfig | None = None,
+                 partitioner: str = "awapart"):
+    """Load LUBM and assemble the service facade (no partition yet)."""
     ds = lubm.load(universities, seed)
-    space = FeatureSpace(ds.store,
-                         type_predicate=ds.dictionary.lookup("rdf:type"))
-    ctrl = AWAPartController(space, n_shards=shards, config=config)
-    return ds, space, ctrl
+    part = (HashPartitioner() if partitioner == "hash"
+            else PARTITIONERS[partitioner](config))
+    svc = KGService.from_dataset(ds, shards, part)
+    return ds, svc
 
 
-def serve_workload(ds, space, state, queries, net=None):
-    sharded = engine.ShardedStore(ds.store, space, state)
-    times, stats = engine.run_workload(queries, sharded, net)
-    return sharded, times, stats
-
-
-def experiment1(ds, space, ctrl, verbose=True):
+def experiment1(ds, svc: KGService, verbose=True):
     """Workload-composition change: 14 base queries -> +10 new queries."""
-    base = ds.base_workload()
-    space.track_workload(base)
-    state = ctrl.initial_partition(base)
+    kg = svc.bootstrap(ds.base_workload())
     extended = ds.extended_workload()
-    _, t_initial, s_initial = serve_workload(ds, space, state, extended)
+    t_initial, s_initial = svc.run_workload(extended)
 
-    def measure(cand):
-        sh = engine.ShardedStore(ds.store, space, cand)
-        return engine.workload_average_time(list(ctrl.workload.values()), sh)
+    if not hasattr(svc.partitioner, "adapt"):   # static strategy: no round
+        avg0 = float(np.mean(list(t_initial.values())))
+        if verbose:
+            print(f"[exp1] strategy={svc.partitioner.name} (static): "
+                  f"all-24 avg {avg0*1e3:.1f} ms, no adaptation")
+        return dict(initial=t_initial, adaptive=t_initial, report=None,
+                    stats_initial=s_initial, stats_adaptive=s_initial,
+                    state=kg.state, kg=kg)
 
-    new_queries = ds.workload([f"EQ{i}" for i in range(1, 11)])
-    state2, report = ctrl.adapt(new_queries, measure=measure)
-    _, t_adapt, s_adapt = serve_workload(ds, space, state2, extended)
+    report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+    t_adapt, s_adapt = svc.run_workload(extended)
     if verbose:
         _print_exp(t_initial, t_adapt, s_initial, s_adapt, report)
     return dict(initial=t_initial, adaptive=t_adapt, report=report,
                 stats_initial=s_initial, stats_adaptive=s_adapt,
-                state=state2)
+                state=kg.state, kg=kg)
 
 
-def experiment2(ds, space, ctrl, hot_query: str = "Q1",
+def experiment2(ds, svc: KGService, hot_query: str = "Q1",
                 hot_share: float = 0.5, verbose=True):
     """Frequency change: hot_query becomes hot_share of the workload."""
     base = ds.base_workload()
-    space.track_workload(base)
-    state = ctrl.initial_partition(base)
+    svc.bootstrap(base)
     n = len(base)
     hot_freq = hot_share * (n - 1) / (1 - hot_share)
     biased = ds.workload([q.name for q in base],
                          frequencies={hot_query: hot_freq})
-    sharded0 = engine.ShardedStore(ds.store, space, state)
-    t0 = engine.workload_average_time(biased, sharded0)
+    t0 = svc.workload_average_time(biased)
 
-    def measure(cand):
-        sh = engine.ShardedStore(ds.store, space, cand)
-        return engine.workload_average_time(biased, sh)
+    if not hasattr(svc.partitioner, "adapt"):   # static strategy: no round
+        if verbose:
+            print(f"[exp2] strategy={svc.partitioner.name} (static): "
+                  f"biased avg {t0*1e3:.1f} ms, no adaptation")
+        return dict(t_initial=t0, t_adaptive=t0, report=None,
+                    state=svc.kg.state, kg=svc.kg)
 
-    state2, report = ctrl.adapt(biased, measure=measure)
-    sharded1 = engine.ShardedStore(ds.store, space, state2)
-    t1 = engine.workload_average_time(biased, sharded1)
+    report = svc.adapt(biased)
+    t1 = svc.workload_average_time(biased)
     if verbose:
         print(f"[exp2] biased-workload avg: initial {t0*1e3:.1f} ms -> "
               f"adaptive {t1*1e3:.1f} ms "
               f"({(1 - t1 / max(t0, 1e-12)) * 100:.1f}% improvement) | "
               f"{report.plan.summary()}")
-    return dict(t_initial=t0, t_adaptive=t1, report=report, state=state2)
+    return dict(t_initial=t0, t_adaptive=t1, report=report,
+                state=svc.kg.state, kg=svc.kg)
 
 
 def _print_exp(t0: Dict, t1: Dict, s0, s1, report) -> None:
@@ -93,8 +98,8 @@ def _print_exp(t0: Dict, t1: Dict, s0, s1, report) -> None:
     old_q = [n for n in t0 if not n.startswith("EQ")]
     avg = lambda t, qs: float(np.mean([t[q] for q in qs]))
     print(f"[exp1] adaptation accepted={report.accepted} "
-          f"dj {report.dj_before:.0f}->{report.dj_after:.0f} | "
-          f"{report.plan.summary()}")
+          f"dj {report.dj_before:.0f}->{report.dj_after:.0f} "
+          f"clusters={report.n_clusters} | {report.plan.summary()}")
     print(f"[exp1] new queries avg: {avg(t0,new_q)*1e3:.1f} -> "
           f"{avg(t1,new_q)*1e3:.1f} ms "
           f"({(1 - avg(t1,new_q)/avg(t0,new_q))*100:.1f}% improvement)")
@@ -109,24 +114,27 @@ def main() -> None:
     ap.add_argument("--universities", type=int, default=10)
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--experiment", type=int, default=1, choices=[1, 2])
+    ap.add_argument("--partitioner", default="awapart",
+                    choices=sorted(PARTITIONERS))
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
 
     t0 = time.time()
-    ds, space, ctrl = build_system(args.universities, args.shards)
+    ds, svc = build_system(args.universities, args.shards,
+                           partitioner=args.partitioner)
     print(f"loaded LUBM({args.universities}): {ds.store.n_triples} triples "
-          f"({time.time()-t0:.1f}s), {space.n_features} features, "
-          f"{args.shards} shards")
+          f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
+          f"{args.shards} shards, strategy={svc.partitioner.name}")
     if args.experiment == 1:
-        out = experiment1(ds, space, ctrl)
+        out = experiment1(ds, svc)
     else:
-        out = experiment2(ds, space, ctrl)
+        out = experiment2(ds, svc)
     if args.show_federated:
         state = out["state"]
         q = ds.queries["Q9"]
         print("\nFederated rewrite of Q9 under the adapted partition:")
-        print(rewrite.federated_sparql(q, space, state, ds.dictionary))
+        print(rewrite.federated_sparql(q, svc.space, state, ds.dictionary))
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.features import FeatureSpace
+from repro.core.migration import TRIPLE_BYTES
 from repro.core.partition import PartitionState
 from repro.graph.triples import TripleStore
 from repro.query.pattern import Query, is_var
@@ -164,16 +165,11 @@ def _join(table: Optional[Dict[int, np.ndarray]], pat, rows: np.ndarray,
     return out
 
 
-def execute(q: Query, sharded: ShardedStore,
-            net: NetworkModel | None = None) -> Tuple[Dict[int, np.ndarray], ExecStats]:
-    """Run a BGP; returns bindings {var: column} + execution statistics."""
-    stats = ExecStats()
-    ppn = _primary_shard(q, sharded.space, sharded.state)
-    t0 = time.perf_counter()
-
-    # greedy join order: most selective first, staying connected
-    remaining = list(q.patterns)
-    counts = {pat: _estimated_count(sharded.shards, pat) for pat in remaining}
+def _join_order(patterns: Sequence[Tuple[int, int, int]],
+                counts: Dict[Tuple[int, int, int], int],
+                ) -> List[Tuple[int, int, int]]:
+    """Greedy join order: most selective first, staying connected."""
+    remaining = list(patterns)
     bound_vars: set = set()
     order: List[Tuple[int, int, int]] = []
     while remaining:
@@ -184,6 +180,19 @@ def execute(q: Query, sharded: ShardedStore,
         order.append(pick)
         remaining.remove(pick)
         bound_vars.update(s for s in pick if is_var(s))
+    return order
+
+
+def execute(q: Query, sharded: ShardedStore,
+            net: NetworkModel | None = None) -> Tuple[Dict[int, np.ndarray], ExecStats]:
+    """Run a BGP; returns bindings {var: column} + execution statistics."""
+    stats = ExecStats()
+    ppn = _primary_shard(q, sharded.space, sharded.state)
+    t0 = time.perf_counter()
+
+    counts = {pat: _estimated_count(sharded.shards, pat)
+              for pat in q.patterns}
+    order = _join_order(q.patterns, counts)
 
     table: Optional[Dict[int, np.ndarray]] = None
     for pat in order:
@@ -237,3 +246,78 @@ def workload_average_time(queries: Sequence[Query], sharded: ShardedStore,
     freqs = np.array([q.frequency for q in queries])
     vals = np.array([times[q.name] for q in queries])
     return float((vals * freqs).sum() / freqs.sum())
+
+
+# --------------------------------------------------------------------------- #
+# layout-invariant query profiles (candidate evaluation without re-execution)
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class QueryProfile:
+    """Everything about a query's execution that does NOT depend on the
+    partition layout: the join order, each executed pattern's matched global
+    row ids, the join-pipeline row counts, and the result cardinality.
+
+    Join results are a property of the *global* triple set — shards only
+    change where matches live, i.e. the federation accounting. A profile is
+    computed once per query (one real execution worth of work against the
+    global store) and then prices any candidate ``PartitionState`` with pure
+    bincount arithmetic via :func:`stats_from_profile`."""
+    pattern_rows: List[np.ndarray]     # global row ids per executed pattern
+    join_rows: int
+    rows: int
+    n_patterns: int                    # len(q.patterns), for dj accounting
+
+
+def profile_query(q: Query, store: TripleStore) -> QueryProfile:
+    """One real execution against the global store, recording row ids."""
+    counts = {pat: store.count(None if is_var(pat[0]) else pat[0],
+                               None if is_var(pat[1]) else pat[1],
+                               None if is_var(pat[2]) else pat[2])
+              for pat in q.patterns}
+    order = _join_order(q.patterns, counts)
+
+    prof = QueryProfile(pattern_rows=[], join_rows=0, rows=0,
+                        n_patterns=len(q.patterns))
+    table: Optional[Dict[int, np.ndarray]] = None
+    for pat in order:
+        s, p, o = pat
+        idx = store.match_indices(None if is_var(s) else s,
+                                  None if is_var(p) else p,
+                                  None if is_var(o) else o)
+        prof.pattern_rows.append(np.asarray(idx, dtype=np.int64))
+        rows = store.triples[idx]
+        before = len(next(iter(table.values()))) if table else 0
+        table = _join(table, pat, rows)
+        after = len(next(iter(table.values()))) if table else 0
+        prof.join_rows += before + len(rows) + after
+        if table is not None and len(next(iter(table.values()), ())) == 0:
+            break
+    prof.rows = len(next(iter(table.values()))) if table else 0
+    return prof
+
+
+def stats_from_profile(q: Query, prof: QueryProfile, space: FeatureSpace,
+                       state: PartitionState,
+                       triple_shard: np.ndarray) -> ExecStats:
+    """Re-account a profiled query under a candidate layout.
+
+    Reproduces ``execute``'s federation statistics exactly — same PPN rule,
+    same per-shard scan/shipping arithmetic — without re-running any joins.
+    ``triple_shard`` maps every global triple row to its candidate shard."""
+    stats = ExecStats(join_rows=prof.join_rows, rows=prof.rows)
+    ppn = _primary_shard(q, space, state)
+    multi = prof.n_patterns > 1
+    for idx in prof.pattern_rows:
+        per_shard = np.bincount(triple_shard[idx], minlength=state.n_shards)
+        stats.scan_rows_critical += int(per_shard.max()) if len(idx) else 0
+        off = per_shard.copy()
+        off[ppn] = 0
+        nz = int((off > 0).sum())
+        shipped = int(off.sum())
+        stats.messages += nz
+        stats.rows_shipped += shipped
+        stats.bytes_shipped += shipped * TRIPLE_BYTES
+        if multi:
+            stats.distributed_joins += nz
+    return stats

@@ -1,0 +1,110 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` library.
+
+Loaded only when the real package is unavailable (see ``conftest.py``):
+property tests degrade to seeded example sweeps — every ``@given`` test runs
+``max_examples`` deterministic cases (boundary values first, then seeded
+randoms) instead of being skipped, so the tier-1 suite keeps its coverage on
+machines without dev dependencies.
+
+Only the surface this repo uses is implemented: ``given``, ``settings``
+(``max_examples`` / ``deadline``), ``assume``, ``note`` and
+``strategies.integers``.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, List
+
+import numpy as np
+
+__version__ = "0.0-shim"
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    """A value source: boundary examples first, then seeded randoms."""
+
+    def __init__(self, boundaries: List[Any], sample: Callable):
+        self._boundaries = boundaries
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator, case: int) -> Any:
+        if case < len(self._boundaries):
+            return self._boundaries[case]
+        return self._sample(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        boundaries=[int(min_value), int(max_value)],
+        sample=lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(_integers)
+
+
+strategies = _StrategiesNamespace()
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption
+    return True
+
+
+def note(message: str) -> None:   # pragma: no cover - debugging aid
+    print(message)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored) -> Callable:
+    def decorate(fn: Callable) -> Callable:
+        fn._shim_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def given(*gstrats: _Strategy) -> Callable:
+    """Fill the test's rightmost parameters from the given strategies
+    (matching hypothesis semantics); remaining parameters stay visible to
+    pytest as fixtures."""
+
+    def decorate(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        assert len(params) >= len(gstrats), \
+            f"{fn.__name__}: more strategies than parameters"
+        fixture_params = params[:len(params) - len(gstrats)]
+        # hypothesis fills the RIGHTMOST parameters; bind them by name so
+        # pytest-supplied fixture kwargs (the leftmost params) can coexist
+        gen_names = [p.name for p in params[len(params) - len(gstrats):]]
+
+        def wrapper(*args, **kwargs):
+            n = int(getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(0xAE5_0000 + len(gstrats))
+            for case in range(n):
+                vals = {name: s.example(rng, case)
+                        for name, s in zip(gen_names, gstrats)}
+                try:
+                    fn(*args, **kwargs, **vals)
+                except UnsatisfiedAssumption:
+                    continue
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # pytest reads this signature for fixture injection; the generated
+        # parameters must not look like fixtures
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples",
+                                             _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+
+    return decorate

@@ -1,0 +1,143 @@
+"""repro.api: incremental shard views vs full rebuild, strategy plugging,
+and service/facade invariants."""
+import numpy as np
+import pytest
+
+from repro.api import (AWAPartitioner, HashPartitioner, KGService,
+                       Partitioner, WawPartitioner)
+from repro.core.partition import hash_partition
+from repro.query import engine
+
+
+def _assert_views_match_full_rebuild(kg):
+    """Every materialized shard view must equal a from-scratch rebuild of the
+    same PartitionState (triples in identical global order)."""
+    full = engine.ShardedStore(kg.store, kg.space, kg.state)
+    for s, (inc, ref) in enumerate(zip(kg.shards, full.shards)):
+        assert np.array_equal(inc.triples, ref.triples), f"shard {s} diverged"
+    assert sum(kg.shard_sizes()) == kg.store.n_triples
+
+
+def test_incremental_views_equal_full_rebuild_across_rounds(small_lubm):
+    """Equivalence property: applying MigrationPlan deltas to materialized
+    views == rebuilding every shard from the PartitionState, across several
+    adaptation rounds (including universe growth from new PO features)."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    _assert_views_match_full_rebuild(kg)
+
+    rounds = [["EQ1", "EQ2", "EQ3"],
+              ["EQ4", "EQ5", "EQ6"],
+              [f"EQ{i}" for i in range(7, 11)]]
+    for names in rounds:
+        svc.reset_baseline()      # force a round regardless of threshold
+        report = svc.adapt(small_lubm.workload(names))
+        assert report is not None
+        _assert_views_match_full_rebuild(kg)
+
+
+def test_profile_accounting_matches_execution(small_lubm):
+    """Candidate pricing (stats_from_profile over cached QueryProfiles) must
+    reproduce engine.execute's federation statistics exactly, under both the
+    live layout and an arbitrary other one."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    queries = small_lubm.extended_workload()
+    layouts = [kg.state, hash_partition(kg.state.feature_sizes, 4, seed=3)]
+    fields = ("scan_rows_critical", "join_rows", "distributed_joins",
+              "rows_shipped", "bytes_shipped", "messages", "rows")
+    for layout in layouts:
+        sh = engine.ShardedStore(small_lubm.store, svc.space, layout)
+        ts = layout.triple_shards(kg.owners).astype(np.int32)
+        for q in queries:
+            _, real = engine.execute(q, sh)
+            est = engine.stats_from_profile(q, kg.profile(q), svc.space,
+                                            layout, ts)
+            for f in fields:
+                assert getattr(real, f) == getattr(est, f), (q.name, f)
+            assert abs(real.modeled_time() - est.modeled_time()) < 1e-12
+
+
+def test_measure_candidate_is_side_effect_free(small_lubm):
+    """Evaluating a candidate layout must leave state, row-sets and views
+    untouched (pure profile re-accounting)."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    queries = small_lubm.base_workload()
+
+    before_views = list(kg.shards)                  # materialize + capture
+    before_f2s = kg.state.feature_to_shard.copy()
+    before_sizes = kg.shard_sizes()
+
+    cand = hash_partition(kg.state.feature_sizes, kg.n_shards, seed=7)
+    t = kg.measure_candidate(cand, queries)
+    assert t > 0
+
+    assert np.array_equal(kg.state.feature_to_shard, before_f2s)
+    assert kg.shard_sizes() == before_sizes
+    for v0, v1 in zip(before_views, kg.shards):
+        assert v0 is v1                             # views restored by pointer
+    _assert_views_match_full_rebuild(kg)
+
+
+def test_commit_moves_only_planned_triples(small_lubm):
+    """commit() returns the applied MigrationPlan; untouched shard views are
+    reused, not rebuilt."""
+    svc = KGService.from_dataset(small_lubm, n_shards=8)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    views0 = list(kg.shards)
+    rebuilds0 = kg.view_rebuilds
+
+    new_state = kg.state.copy()
+    f = int(np.argmax(new_state.feature_sizes))     # move one big feature
+    src = int(new_state.feature_to_shard[f])
+    dst = (src + 1) % kg.n_shards
+    new_state.feature_to_shard[f] = dst
+
+    plan = kg.commit(new_state)
+    assert {m[0] for m in plan.moves} == {f}
+    assert plan.n_triples == int(kg.state.feature_sizes[f])
+    _assert_views_match_full_rebuild(kg)
+    # only src/dst re-indexed, the other six views are the same objects
+    for s in range(kg.n_shards):
+        if s not in (src, dst):
+            assert kg.shards[s] is views0[s]
+    assert kg.view_rebuilds == rebuilds0 + 2
+
+
+@pytest.mark.parametrize("make", [HashPartitioner, WawPartitioner,
+                                  AWAPartitioner])
+def test_partitioner_strategies_interchangeable(small_lubm, make):
+    """All strategies satisfy the protocol and serve the same workload."""
+    part = make()
+    assert isinstance(part, Partitioner)
+    svc = KGService.from_dataset(small_lubm, n_shards=4, partitioner=part)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    assert sum(kg.shard_sizes()) == small_lubm.store.n_triples
+    _, stats = svc.query(small_lubm.queries["Q6"])
+    assert stats.rows > 0
+    assert svc.avg_execution_time() > 0
+
+
+def test_non_adaptive_strategy_rejects_adapt(small_lubm):
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 partitioner=HashPartitioner())
+    svc.bootstrap()
+    assert not svc.should_adapt()
+    assert svc.maybe_adapt() is None
+    with pytest.raises(TypeError):
+        svc.adapt(small_lubm.base_workload())
+
+
+def test_adaptive_strategy_beats_hash_on_distributed_joins(small_lubm):
+    """The point of the paper: workload-aware placement cuts federation."""
+    base = small_lubm.base_workload()
+
+    def dj_total(partitioner, workload):
+        svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                     partitioner=partitioner)
+        svc.bootstrap(workload)
+        _, stats = svc.run_workload(base)
+        return sum(s.distributed_joins for s in stats.values())
+
+    assert dj_total(WawPartitioner(), base) <= dj_total(HashPartitioner(), ())

@@ -27,6 +27,8 @@ def test_adapt_reports_chosen_cut(small_lubm):
     ctrl.initial_partition(base)
     _, report = ctrl.adapt(small_lubm.workload(["EQ1", "EQ2", "EQ3"]))
     assert report.chosen_cut in cfg.cut_candidates
+    # the report carries the real cluster count of the winning cut
+    assert 0 < report.n_clusters <= len(ctrl.workload)
 
 
 def test_adapt_single_cut_fallback(small_lubm):

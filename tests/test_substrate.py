@@ -142,8 +142,10 @@ def test_restore_with_new_sharding(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     tree = {"w": jnp.arange(8, dtype=jnp.float32)}
     ckpt.save(tmp_path, 0, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # axis_types / AxisType only exist on newer jax
+    kwargs = ({"axis_types": (jax.sharding.AxisType.Auto,)}
+              if hasattr(jax.sharding, "AxisType") else {})
+    mesh = jax.make_mesh((1,), ("data",), **kwargs)
     sh = {"w": NamedSharding(mesh, P("data"))}
     out = ckpt.restore(tmp_path, 0, tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8))

@@ -1,49 +1,41 @@
-"""End-to-end behaviour of the paper's system (Fig. 6 master-node loop)."""
+"""End-to-end behaviour of the paper's system (Fig. 6 master-node loop),
+orchestrated through the public ``repro.api`` surface."""
 import numpy as np
 
+from repro.api import KGService
 from repro.core.adaptive import AdaptConfig, AWAPartController
 from repro.core.features import FeatureSpace
-from repro.query import engine
 
 
 def test_full_awapart_loop(lubm3):
     """Initial partition -> serve -> workload change -> adapt -> improve."""
-    space = FeatureSpace(lubm3.store,
-                         type_predicate=lubm3.dictionary.lookup("rdf:type"))
-    ctrl = AWAPartController(space, n_shards=8)
-    base = lubm3.base_workload()
-    space.track_workload(base)
-    state0 = ctrl.initial_partition(base)
+    svc = KGService.from_dataset(lubm3, n_shards=8)
+    kg = svc.bootstrap(lubm3.base_workload())
 
     # balanced initial partition (oversized single features bound this)
-    assert state0.imbalance() < 2.5
-    sharded0 = engine.ShardedStore(lubm3.store, space, state0)
-    assert sum(sharded0.shard_sizes()) == lubm3.store.n_triples
+    assert kg.imbalance() < 2.5
+    assert sum(kg.shard_sizes()) == lubm3.store.n_triples
 
     # serve the extended workload, record runtimes (TM metadata)
     extended = lubm3.extended_workload()
-    times0, stats0 = engine.run_workload(extended, sharded0)
+    times0, stats0 = svc.run_workload(extended)
     for q in extended:
-        ctrl.observe(q, times0[q.name])
-    assert ctrl.avg_execution_time() > 0
+        svc.observe(q, times0[q.name])
+    assert svc.avg_execution_time() > 0
 
-    def measure(cand):
-        sh = engine.ShardedStore(lubm3.store, space, cand)
-        return engine.workload_average_time(list(ctrl.workload.values()), sh)
-
-    state1, report = ctrl.adapt(
-        lubm3.workload([f"EQ{i}" for i in range(1, 11)]), measure=measure)
+    report = svc.adapt(lubm3.workload([f"EQ{i}" for i in range(1, 11)]))
     # the guard guarantees no regression on the measured objective
     if report.accepted:
         assert report.t_new < report.t_base
         assert report.plan.n_moves > 0
         assert report.dj_after <= report.dj_before
+        assert report.n_clusters > 0
     else:
         assert report.plan.n_moves == 0
 
-    sharded1 = engine.ShardedStore(lubm3.store, space, state1)
+    # the facade serves the adapted layout in place (incremental delta)
     dj0 = sum(s.distributed_joins for s in stats0.values())
-    _, stats1 = engine.run_workload(extended, sharded1)
+    _, stats1 = svc.run_workload(extended)
     dj1 = sum(s.distributed_joins for s in stats1.values())
     if report.accepted:
         assert dj1 <= dj0
@@ -55,8 +47,25 @@ def test_should_adapt_threshold(small_lubm):
     ctrl = AWAPartController(space, n_shards=4,
                              config=AdaptConfig(adapt_threshold=1.5))
     q = small_lubm.queries["Q6"]
-    ctrl._baseline_avg = 0.1
+    ctrl.reset_baseline(0.1)
     ctrl.observe(q, 0.1)
     assert not ctrl.should_adapt()
     ctrl.exec_times[q.name] = [0.4]     # 4x degradation
     assert ctrl.should_adapt()
+
+
+def test_service_threshold_loop(small_lubm):
+    """Service-level TM loop: baseline reset forces the next round."""
+    svc = KGService.from_dataset(
+        small_lubm, n_shards=4,
+        config=AdaptConfig(adapt_threshold=1.5))
+    svc.bootstrap(small_lubm.base_workload())
+    svc.reset_baseline(0.1)
+    q = small_lubm.queries["Q6"]
+    svc.observe(q, 0.1)
+    assert not svc.should_adapt()
+    assert svc.maybe_adapt() is None          # within threshold: no round
+    svc.observe(q, 10.0)                      # massive degradation
+    assert svc.should_adapt()
+    svc.reset_baseline()                      # clearing also forces a round
+    assert svc.should_adapt()
