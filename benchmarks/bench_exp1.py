@@ -7,7 +7,9 @@ Q9 in the paper).
 
 Orchestrated through ``repro.api``: the adaptation round evaluates candidate
 cuts as incremental deltas on the live ``PartitionedKG`` — no full
-``ShardedStore`` re-materialization per candidate.
+``ShardedStore`` re-materialization per candidate — and the workload-window
+execution is timed under both ``Executor`` backends (numpy per-query vs the
+batched jax path).
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.api import KGService
+from repro.api import JaxExecutor, KGService, NumpyExecutor
 from repro.graph import lubm
 
 SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "10"))
@@ -74,4 +76,23 @@ def run() -> List[Tuple[str, float, str]]:
     rows.append(("exp1/dj_total_adaptive",
                  sum(s.distributed_joins for s in stats1.values()),
                  f"accepted={report.accepted}"))
+
+    # workload-window execution wall time: numpy per-query vs jax batched
+    # (plans come from the facade cache — one per (query, store))
+    plans = [kg.plan(q) for q in extended]
+    walls = {}
+    for ex in (NumpyExecutor(), JaxExecutor()):
+        ex.run_batch(plans, kg)                 # warm-up (jax dispatch/compile)
+        best = min(_timed(ex, plans, kg) for _ in range(2))
+        walls[ex.name] = best
+    rows.append(("exp1/window_wall_numpy", walls["numpy"] * 1e6,
+                 f"queries={len(extended)}_per-query"))
+    rows.append(("exp1/window_wall_jax", walls["jax"] * 1e6,
+                 f"batched_speedup={walls['numpy'] / walls['jax']:.2f}x"))
     return rows
+
+
+def _timed(ex, plans, kg) -> float:
+    t0 = time.perf_counter()
+    ex.run_batch(plans, kg)
+    return time.perf_counter() - t0

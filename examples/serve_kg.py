@@ -2,12 +2,13 @@
 with batched queries while the workload drifts, adapting online.
 
 Simulates the Fig.-6 deployment through ``repro.api``: queries arrive in
-batches with a drifting mix; the ``KGService`` monitors per-query runtimes
-(TM) and triggers the Fig.-5 adaptation when the average degrades past the
-threshold, applying the migration to the live shard views as an incremental
-delta.
+batches with a drifting mix and each batch executes as ONE backend batch
+(``svc.query_batch`` — a single dispatched batch on the jax executor); the
+``KGService`` monitors per-query runtimes (TM) and triggers the Fig.-5
+adaptation when the average degrades past the threshold, applying the
+migration to the live shard views as an incremental delta.
 
-    PYTHONPATH=src python examples/serve_kg.py [--batches 12]
+    PYTHONPATH=src python examples/serve_kg.py [--batches 12] [--executor jax]
 """
 import argparse
 import time
@@ -25,6 +26,7 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--queries-per-batch", type=int, default=24)
+    ap.add_argument("--executor", default="jax", choices=["numpy", "jax"])
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -32,11 +34,12 @@ def main() -> None:
     ds = lubm.load(args.universities, 0)
     svc = KGService.from_dataset(
         ds, args.shards,
-        AWAPartitioner(AdaptConfig(adapt_threshold=1.10)))
+        AWAPartitioner(AdaptConfig(adapt_threshold=1.10)),
+        executor=args.executor)
     base = ds.base_workload()
     svc.bootstrap(base)
     print(f"[{time.time()-t0:5.1f}s] serving {ds.store.n_triples} triples on "
-          f"{args.shards} shards")
+          f"{args.shards} shards (executor={svc.executor.name})")
     svc.reset_baseline()      # no reference yet: first trigger adapts
     adaptations = 0
 
@@ -51,8 +54,7 @@ def main() -> None:
         batch_queries = [ds.queries[n] for n in names]
 
         t_batch = time.perf_counter()
-        for q in batch_queries:
-            svc.query(q)
+        svc.query_batch(batch_queries)      # one dispatched backend batch
         wall = time.perf_counter() - t_batch
         avg_ms = svc.avg_execution_time() * 1e3
 

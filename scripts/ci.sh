@@ -11,4 +11,38 @@ python -m pytest -x -q
 echo "== smoke: examples/quickstart.py (KGService + all strategies) =="
 python examples/quickstart.py
 
+echo "== smoke: query_batch on LUBM(1) under both executors =="
+python - <<'EOF'
+from repro.api import KGService
+from repro.graph import lubm
+
+ds = lubm.load(1, seed=0)
+window = ds.extended_workload()
+rows = {}
+for name in ("numpy", "jax"):
+    svc = KGService.from_dataset(ds, n_shards=4, executor=name)
+    kg = svc.bootstrap(ds.base_workload())
+    results = svc.query_batch(window)
+    assert len(results) == len(window)
+    assert kg.plan_builds == len(window), kg.plan_builds
+    rows[name] = [st.rows for _, st in results]
+    print(f"[ci] query_batch x{len(window)} executor={name}: "
+          f"{sum(rows[name])} total rows")
+assert rows["numpy"] == rows["jax"], "executor backends disagree"
+EOF
+
+echo "== deprecation: no in-repo caller of the shimmed engine entry points =="
+# the shims live in src/repro/query/engine.py and are exercised (with
+# pytest.warns) only by tests/test_executors.py
+hits=$(grep -rnE \
+  "engine\.(execute|run_workload|workload_average_time|profile_query|stats_from_profile)\(|from repro\.query\.engine import .*(execute|run_workload|workload_average_time|profile_query|stats_from_profile)" \
+  src examples benchmarks tests --include='*.py' \
+  | grep -v "src/repro/query/engine.py" \
+  | grep -v "tests/test_executors.py" || true)
+if [ -n "$hits" ]; then
+  echo "deprecated engine entry points still used in-repo:"
+  echo "$hits"
+  exit 1
+fi
+
 echo "CI OK"

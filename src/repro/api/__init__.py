@@ -4,9 +4,13 @@ Everything callers need to serve a partitioned knowledge graph:
 
 * strategies: :class:`Partitioner` protocol with :class:`HashPartitioner`,
   :class:`WawPartitioner`, :class:`AWAPartitioner`;
-* :class:`PartitionedKG` — shard-view facade with incremental delta updates;
-* :class:`KGService` — the Fig.-6 session loop
-  (``bootstrap / query / observe / maybe_adapt / reset_baseline``).
+* :class:`PartitionedKG` — shard-view facade with incremental delta updates
+  and the per-``(query, store)`` plan cache;
+* :class:`KGService` — the Fig.-6 session loop (``bootstrap / query /
+  query_batch / observe / maybe_adapt / reset_baseline``);
+* executors: :class:`Executor` protocol with :class:`NumpyExecutor`
+  (reference) and :class:`JaxExecutor` (batched), re-exported from
+  ``repro.query.exec``.
 
 See ``docs/api.md`` for the quickstart.
 """
@@ -14,11 +18,15 @@ from repro.api.facade import PartitionedKG
 from repro.api.partitioners import (AWAPartitioner, HashPartitioner,
                                     Partitioner, WawPartitioner)
 from repro.api.service import KGService
+from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
 
 __all__ = [
     "AWAPartitioner",
+    "Executor",
     "HashPartitioner",
+    "JaxExecutor",
     "KGService",
+    "NumpyExecutor",
     "PartitionedKG",
     "Partitioner",
     "WawPartitioner",

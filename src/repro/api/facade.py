@@ -7,15 +7,18 @@ Thereafter every layout change arrives as a ``MigrationPlan``-shaped delta
 shards actually touched by moved features are re-indexed; untouched shard
 views are reused as-is.
 
-Candidate evaluation (``measure_candidate``) never touches the views at all:
-it re-prices cached layout-invariant query profiles
-(``engine.QueryProfile``) under the candidate's triple->shard map — pure
-bincount arithmetic instead of re-executing the workload's joins per
-candidate cut, which was the hot path of every adaptation round.
+The facade is also the plan cache: ``kg.plan(q)`` builds the
+``repro.query.plan.QueryPlan`` IR once per ``(query, store)`` and serves it
+to every executor until the layout changes (``commit`` / ``sync_universe``
+invalidate, because the PPN choice and federation annotations are
+layout-dependent). Layout-invariant ``QueryProfile``s are derived from the
+plan and cached separately — they survive commits, which is what makes
+candidate evaluation (``measure_candidate``) pure bincount re-accounting
+with no joins re-executed and no views touched.
 
 The object is duck-compatible with ``repro.query.engine.ShardedStore``
-(``.space`` / ``.state`` / ``.shards``), so ``engine.execute`` and the
-workload helpers run against it unchanged.
+(``.space`` / ``.state`` / ``.shards`` / ``.store`` / ``.triple_shard``), so
+any ``Executor`` runs against it unchanged.
 """
 from __future__ import annotations
 
@@ -27,7 +30,8 @@ from repro.core import migration
 from repro.core.features import FeatureSpace
 from repro.core.partition import PartitionState
 from repro.graph.triples import TripleStore
-from repro.query import engine
+from repro.query import exec as qexec
+from repro.query import plan as qplan
 from repro.query.pattern import Query
 
 
@@ -35,10 +39,13 @@ class PartitionedKG:
     """Per-shard views of a feature-partitioned KG with incremental updates."""
 
     def __init__(self, store: TripleStore, space: FeatureSpace,
-                 state: PartitionState, owners: np.ndarray | None = None):
+                 state: PartitionState, owners: np.ndarray | None = None,
+                 max_join_rows: int = qexec.DEFAULT_MAX_JOIN_ROWS):
         self.store = store
         self.space = space
         self.state = state
+        # profiling honors the serving executor's cartesian-join cap
+        self.max_join_rows = max_join_rows
         self.owners = space.triple_owners() if owners is None else owners
         self._triple_shard = state.triple_shards(self.owners).astype(np.int32)
         self._rows: List[np.ndarray] = [
@@ -46,17 +53,28 @@ class PartitionedKG:
             for s in range(state.n_shards)]
         self._views: List[Optional[TripleStore]] = [None] * state.n_shards
         self.view_rebuilds = 0         # telemetry: shard views (re)built
-        # layout-invariant query profiles, keyed by query name (+ patterns,
-        # so a re-defined query under the same name is re-profiled)
-        self._profiles: Dict[str, Tuple[tuple, engine.QueryProfile]] = {}
+        # query plans, cached per (query, store) until the layout changes;
+        # keyed by query name (+ patterns, so a re-defined query under the
+        # same name is re-planned)
+        self._plans: Dict[str, Tuple[tuple, qplan.QueryPlan]] = {}
+        self.plan_builds = 0           # telemetry: plans built / cache hits
+        self.plan_hits = 0
+        # layout-invariant query profiles (derived from plans; survive
+        # commits — join results don't depend on the layout)
+        self._profiles: Dict[str, Tuple[tuple, qplan.QueryProfile]] = {}
         self._rebuild_feature_index()
 
     # ------------------------------------------------------------------ #
-    # engine compatibility
+    # executor compatibility
     # ------------------------------------------------------------------ #
     @property
     def n_shards(self) -> int:
         return self.state.n_shards
+
+    @property
+    def triple_shard(self) -> np.ndarray:
+        """Current shard of every global triple row, (N,) int32."""
+        return self._triple_shard
 
     @property
     def shards(self) -> List[TripleStore]:
@@ -96,11 +114,13 @@ class PartitionedKG:
 
         A split PO feature's triples stay on the parent's shard (ownership
         split, no data movement), so the triple->shard mapping — and every
-        shard view — is unchanged; only owners/sizes/state are re-derived."""
+        shard view — is unchanged; only owners/sizes/state are re-derived.
+        Cached plans are invalidated: feature sizes feed the PPN vote."""
         if self.space.n_features == len(self.state.feature_to_shard):
             return
         self.state, self.owners = migration.extend_for_space(self.state,
                                                              self.space)
+        self._plans.clear()
         self._rebuild_feature_index()
 
     # ------------------------------------------------------------------ #
@@ -123,17 +143,32 @@ class PartitionedKG:
             self._rows[s] = np.flatnonzero(self._triple_shard == s)
             self._views[s] = None          # re-indexed lazily on next access
         self.state = new_state
+        self._plans.clear()                # PPN/federation annotations changed
 
     # ------------------------------------------------------------------ #
-    # public delta API
+    # plans, profiles, candidate pricing
     # ------------------------------------------------------------------ #
-    def profile(self, q: Query) -> engine.QueryProfile:
-        """Layout-invariant execution profile of ``q`` (cached; one real
-        execution against the global store on first use)."""
+    def plan(self, q: Query) -> qplan.QueryPlan:
+        """The query's execution plan under the current layout (cached per
+        ``(query, store)``; invalidated by ``commit``/``sync_universe``)."""
+        pats = tuple(q.patterns)
+        entry = self._plans.get(q.name)
+        if entry is None or entry[0] != pats:
+            entry = (pats, qplan.plan(q, self))
+            self._plans[q.name] = entry
+            self.plan_builds += 1
+        else:
+            self.plan_hits += 1
+        return entry[1]
+
+    def profile(self, q: Query) -> qplan.QueryProfile:
+        """Layout-invariant execution profile of ``q``, derived from its plan
+        (cached; one real execution against the global store on first use)."""
         pats = tuple(q.patterns)
         entry = self._profiles.get(q.name)
         if entry is None or entry[0] != pats:
-            entry = (pats, engine.profile_query(q, self.store))
+            entry = (pats, qexec.profile_from_plan(self.plan(q), self.store,
+                                                   self.max_join_rows))
             self._profiles[q.name] = entry
         return entry[1]
 
@@ -145,11 +180,11 @@ class PartitionedKG:
         derived (one gather) and each profiled pattern re-priced."""
         self.sync_universe()
         triple_shard = cand.feature_to_shard[self.owners].astype(np.int32)
-        net = net or engine.NetworkModel()
+        net = net or qexec.NetworkModel()
         num = den = 0.0
         for q in queries:
-            st = engine.stats_from_profile(q, self.profile(q), self.space,
-                                           cand, triple_shard)
+            st = qplan.stats_from_profile(q, self.profile(q), self.space,
+                                          cand, triple_shard)
             num += st.modeled_time(net) * q.frequency
             den += q.frequency
         return num / max(den, 1e-12)

@@ -1,15 +1,22 @@
 """KGService — the master-node session API (paper Fig. 6).
 
 One object owns the whole serving loop: bootstrap a partition with any
-``Partitioner`` strategy, execute federated queries, monitor per-query
-runtimes (TM), and — for adaptive strategies — trigger/apply the Fig.-5
-adaptation. Drivers, examples, benchmarks, and tests orchestrate through
-this facade only; controller internals are never reached into.
+``Partitioner`` strategy, execute federated queries through a pluggable
+``Executor`` backend, monitor per-query runtimes (TM), and — for adaptive
+strategies — trigger/apply the Fig.-5 adaptation. Drivers, examples,
+benchmarks, and tests orchestrate through this facade only; controller
+internals are never reached into.
 
-    svc = KGService.from_dataset(ds, n_shards=8)
+    svc = KGService.from_dataset(ds, n_shards=8, executor="jax")
     kg = svc.bootstrap(ds.base_workload())
     bindings, stats = svc.query(ds.queries["Q9"])
+    results = svc.query_batch(window)        # one dispatched batch per window
     report = svc.maybe_adapt(new_queries)
+
+Every query is planned once per ``(query, store)`` (the ``PartitionedKG``
+plan cache) and executed by the configured backend: ``executor="numpy"``
+(default, reference semantics) or ``"jax"`` (batched; a whole TM window
+executes in one dispatched batch). An ``Executor`` instance plugs in too.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import numpy as np
 from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
 from repro.core.features import FeatureSpace
 from repro.graph.triples import TripleStore
-from repro.query import engine
+from repro.query import exec as qexec
 from repro.query.pattern import Query
 
 from repro.api.facade import PartitionedKG
@@ -34,11 +41,13 @@ class KGService:
                  partitioner: Partitioner | None = None, *,
                  type_predicate: int | None = None,
                  config: AdaptConfig | None = None,
-                 net: engine.NetworkModel | None = None):
+                 executor: "str | qexec.Executor | None" = None,
+                 net: qexec.NetworkModel | None = None):
         self.store = store
         self.n_shards = n_shards
         self.partitioner = partitioner or AWAPartitioner(config)
         self.space = FeatureSpace(store, type_predicate=type_predicate)
+        self.executor = qexec.get_executor(executor)
         self.net = net
         self.kg: Optional[PartitionedKG] = None
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
@@ -63,27 +72,45 @@ class KGService:
         views (once — all later layout changes are incremental deltas)."""
         state = self.partitioner.partition(self.space, self.n_shards,
                                            list(workload))
-        self.kg = PartitionedKG(self.store, self.space, state)
+        self.kg = PartitionedKG(
+            self.store, self.space, state,
+            max_join_rows=getattr(self.executor, "max_join_rows",
+                                  qexec.DEFAULT_MAX_JOIN_ROWS))
         return self.kg
 
     # ------------------------------------------------------------------ #
     # serving + monitoring (TM)
     # ------------------------------------------------------------------ #
     def query(self, q: Query) -> Tuple[Dict[int, np.ndarray],
-                                       engine.ExecStats]:
+                                       qexec.ExecStats]:
         """Execute one federated query and record its runtime."""
         assert self.kg is not None, "bootstrap() first"
-        bindings, stats = engine.execute(q, self.kg, self.net)
+        bindings, stats = self.executor.run(self.kg.plan(q), self.kg)
         self.observe(q, stats.modeled_time(self.net))
         return bindings, stats
 
-    def run_workload(self, queries: Sequence[Query]):
+    def query_batch(self, queries: Sequence[Query],
+                    ) -> List[Tuple[Dict[int, np.ndarray], qexec.ExecStats]]:
+        """Execute a whole window of queries as one backend batch (a single
+        dispatched batch on the jax executor) and record every runtime."""
         assert self.kg is not None, "bootstrap() first"
-        return engine.run_workload(queries, self.kg, self.net)
+        plans = [self.kg.plan(q) for q in queries]
+        results = self.executor.run_batch(plans, self.kg)
+        for q, (_, stats) in zip(queries, results):
+            self.observe(q, stats.modeled_time(self.net))
+        return results
+
+    def run_workload(self, queries: Sequence[Query],
+                     ) -> Tuple[Dict[str, float], Dict[str, qexec.ExecStats]]:
+        """Batched measurement sweep (no TM recording): per-query modeled
+        times and stats, keyed by query name."""
+        assert self.kg is not None, "bootstrap() first"
+        return qexec.run_workload(queries, self.kg, self.executor, self.net)
 
     def workload_average_time(self, queries: Sequence[Query]) -> float:
         assert self.kg is not None, "bootstrap() first"
-        return engine.workload_average_time(queries, self.kg, self.net)
+        return qexec.workload_average_time(queries, self.kg, self.executor,
+                                           self.net)
 
     def observe(self, query: Query, runtime: float) -> None:
         ctrl = self.controller

@@ -67,23 +67,31 @@ class TripleStore:
             self.pos = _sort_index(self.triples, (P, O, S))
         if self.osp is None:
             self.osp = _sort_index(self.triples, (O, S, P))
+        self._sorted_views: Dict[str, np.ndarray] = {}
+
+    def _sorted_view(self, which: str) -> np.ndarray:
+        """A permutation's sorted triple matrix, materialized lazily on the
+        first pattern lookup that probes it, so a match is pure binary
+        search (no O(N) gather per call) without paying memory for
+        permutations a store never queries."""
+        view = self._sorted_views.get(which)
+        if view is None:
+            view = np.ascontiguousarray(self.triples[getattr(self, which)])
+            self._sorted_views[which] = view
+        return view
 
     # ------------------------------------------------------------------ #
     @property
     def n_triples(self) -> int:
         return int(self.triples.shape[0])
 
-    def _range(self, index: np.ndarray, cols: Sequence[int],
+    def _range(self, view: np.ndarray, cols: Sequence[int],
                vals: Sequence[int]) -> Tuple[int, int]:
-        """[lo, hi) range in ``index`` where triples match vals on prefix cols."""
-        view = self.triples[index][:, list(cols)]
-        lo = hi = 0
-        n = view.shape[0]
-        lo_key = np.array(vals, dtype=np.int64)
+        """[lo, hi) range in the sorted ``view`` matching vals on prefix cols."""
         # successive binary searches on each prefix column
-        lo, hi = 0, n
-        for j, v in enumerate(vals):
-            col = view[lo:hi, j]
+        lo, hi = 0, view.shape[0]
+        for c, v in zip(cols, vals):
+            col = view[lo:hi, c]
             lo2 = lo + int(np.searchsorted(col, v, side="left"))
             hi2 = lo + int(np.searchsorted(col, v, side="right"))
             lo, hi = lo2, hi2
@@ -103,30 +111,31 @@ class TripleStore:
         The permutation values in the sorted indexes *are* row ids, so
         ``match`` is just this plus a gather."""
         if s is not None and p is None and o is None:
-            lo, hi = self._range(self.spo, (S,), (s,))
+            lo, hi = self._range(self._sorted_view("spo"), (S,), (s,))
             return self.spo[lo:hi]
         if s is not None and p is not None and o is None:
-            lo, hi = self._range(self.spo, (S, P), (s, p))
+            lo, hi = self._range(self._sorted_view("spo"), (S, P), (s, p))
             return self.spo[lo:hi]
         if s is not None and p is not None and o is not None:
-            lo, hi = self._range(self.spo, (S, P, O), (s, p, o))
+            lo, hi = self._range(self._sorted_view("spo"), (S, P, O),
+                                 (s, p, o))
             return self.spo[lo:hi]
         if p is not None and o is None and s is None:
-            lo, hi = self._range(self.pos, (P,), (p,))
+            lo, hi = self._range(self._sorted_view("pos"), (P,), (p,))
             return self.pos[lo:hi]
         if p is not None and o is not None and s is None:
-            lo, hi = self._range(self.pos, (P, O), (p, o))
+            lo, hi = self._range(self._sorted_view("pos"), (P, O), (p, o))
             return self.pos[lo:hi]
         if o is not None and s is None and p is None:
-            lo, hi = self._range(self.osp, (O,), (o,))
+            lo, hi = self._range(self._sorted_view("osp"), (O,), (o,))
             return self.osp[lo:hi]
         if o is not None and s is not None and p is None:
-            lo, hi = self._range(self.osp, (O, S), (o, s))
+            lo, hi = self._range(self._sorted_view("osp"), (O, S), (o, s))
             return self.osp[lo:hi]
         return np.arange(self.n_triples, dtype=np.int64)  # fully unbound
 
     def count(self, s: Optional[int], p: Optional[int], o: Optional[int]) -> int:
-        return int(self.match(s, p, o).shape[0])
+        return int(self.match_indices(s, p, o).shape[0])
 
 
 def build_store(triples: np.ndarray, dictionary: Dictionary) -> TripleStore:

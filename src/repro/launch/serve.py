@@ -4,12 +4,12 @@ Master-node loop via the ``repro.api`` service facade: LUBM dataset ->
 workload-aware initial partition (WawPart [21]) -> serve federated queries
 over the shards -> monitor per-query runtimes (TM) -> on workload change,
 run the Fig.-5 adaptation as an incremental shard-view delta -> keep
-serving. ``--experiment 1|2`` reproduces the paper's two evaluations, and
-``--partitioner hash|wawpart|awapart`` swaps the strategy under the same
-harness.
+serving. ``--experiment 1|2`` reproduces the paper's two evaluations,
+``--partitioner hash|wawpart|awapart`` swaps the strategy, and
+``--executor numpy|jax`` swaps the query backend under the same harness.
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
-      --experiment 1
+      --experiment 1 --executor jax
 """
 from __future__ import annotations
 
@@ -31,12 +31,12 @@ PARTITIONERS = {"hash": HashPartitioner, "wawpart": WawPartitioner,
 
 def build_system(universities: int, shards: int, seed: int = 0,
                  config: AdaptConfig | None = None,
-                 partitioner: str = "awapart"):
+                 partitioner: str = "awapart", executor: str = "numpy"):
     """Load LUBM and assemble the service facade (no partition yet)."""
     ds = lubm.load(universities, seed)
     part = (HashPartitioner() if partitioner == "hash"
             else PARTITIONERS[partitioner](config))
-    svc = KGService.from_dataset(ds, shards, part)
+    svc = KGService.from_dataset(ds, shards, part, executor=executor)
     return ds, svc
 
 
@@ -116,16 +116,20 @@ def main() -> None:
     ap.add_argument("--experiment", type=int, default=1, choices=[1, 2])
     ap.add_argument("--partitioner", default="awapart",
                     choices=sorted(PARTITIONERS))
+    ap.add_argument("--executor", default="numpy", choices=["numpy", "jax"],
+                    help="query backend (jax = batched execution)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
 
     t0 = time.time()
     ds, svc = build_system(args.universities, args.shards,
-                           partitioner=args.partitioner)
+                           partitioner=args.partitioner,
+                           executor=args.executor)
     print(f"loaded LUBM({args.universities}): {ds.store.n_triples} triples "
           f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
-          f"{args.shards} shards, strategy={svc.partitioner.name}")
+          f"{args.shards} shards, strategy={svc.partitioner.name}, "
+          f"executor={svc.executor.name}")
     if args.experiment == 1:
         out = experiment1(ds, svc)
     else:

@@ -1,67 +1,39 @@
-"""Distributed BGP query engine over a feature-partitioned triple store.
+"""Compatibility layer over the planner/executor split.
 
-Execution model mirrors the paper's federated SPARQL (Sec. IV): a query runs
-at its Primary Processing Node (PPN) — the shard holding the most of the
-query's features — and every triple pattern whose matches live on other
-shards is a SERVICE call: its bindings are shipped to the PPN (a
-*distributed join*). We execute the joins for real (numpy) and account
-network cost with an explicit model (message latency + bytes/bandwidth),
-since this container has no actual cluster fabric; raw counters
-(distributed joins, bytes, messages) are always reported alongside.
+The query engine now lives in two modules:
+
+* ``repro.query.plan`` — the ``QueryPlan`` IR (``plan(q, stats_source)``),
+  PPN selection, and layout-invariant ``QueryProfile`` pricing;
+* ``repro.query.exec`` — the ``Executor`` protocol with the
+  ``NumpyExecutor`` reference backend and the batched ``JaxExecutor``.
+
+This module keeps :class:`ShardedStore` (per-shard views materialized from a
+``PartitionState``) plus **deprecated** thin shims for the retired
+free-function entry points (``execute`` / ``run_workload`` /
+``workload_average_time`` / ``profile_query`` / ``stats_from_profile``).
+The shims delegate to the new surface and warn; they will be removed after
+one release. In-repo code must not call them (enforced by ``scripts/ci.sh``).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.features import FeatureSpace
-from repro.core.migration import TRIPLE_BYTES
 from repro.core.partition import PartitionState
 from repro.graph.triples import TripleStore
-from repro.query.pattern import Query, is_var
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+from repro.query.pattern import Query
 
-
-@dataclasses.dataclass
-class NetworkModel:
-    """Deterministic cluster cost model.
-
-    Queries execute for real (numpy joins — results are exact), but their
-    *time* is modeled, because this container has no cluster fabric and
-    wall-clock numpy noise would swamp the federation costs the paper's
-    technique optimizes. The model matches the paper's deployment shape:
-    per-shard scans run in parallel (max, not sum), SERVICE calls pay a
-    round-trip latency, and shipped bindings pay serialization+wire time
-    (federated SPARQL over HTTP is slow — effective ~20 MB/s)."""
-    latency_s: float = 0.050          # SERVICE round trip incl. query setup
-    bandwidth_Bps: float = 20e6       # effective federated-result throughput
-    scan_rows_per_s: float = 5e6      # Virtuoso-ish index scan rate
-    join_rows_per_s: float = 5e6      # hash-join probe rate at the PPN
-    row_bytes: float = 60.0           # serialized SPARQL result row (HTTP/XML)
-
-    def time(self, messages: int, rows_shipped: int) -> float:
-        return (messages * self.latency_s
-                + rows_shipped * self.row_bytes / self.bandwidth_Bps)
-
-
-@dataclasses.dataclass
-class ExecStats:
-    scan_rows_critical: int = 0        # sum over patterns of max-shard rows
-    join_rows: int = 0                 # rows flowing through PPN joins
-    distributed_joins: int = 0
-    rows_shipped: int = 0              # binding rows crossing shards
-    bytes_shipped: int = 0             # raw dictionary-encoded payload
-    messages: int = 0
-    rows: int = 0
-    wall_s: float = 0.0                # actual numpy execution time (info)
-
-    def modeled_time(self, net: NetworkModel | None = None) -> float:
-        net = net or NetworkModel()
-        return (self.scan_rows_critical / net.scan_rows_per_s
-                + self.join_rows / net.join_rows_per_s
-                + net.time(self.messages, self.rows_shipped))
+# canonical homes are repro.query.exec / repro.query.plan; re-exported here
+# for backward compatibility
+ExecStats = qexec.ExecStats
+NetworkModel = qexec.NetworkModel
+QueryProfile = qplan.QueryProfile
+_primary_shard = qplan.primary_shard
 
 
 class ShardedStore:
@@ -69,13 +41,14 @@ class ShardedStore:
 
     def __init__(self, store: TripleStore, space: FeatureSpace,
                  state: PartitionState, owners: np.ndarray | None = None):
+        self.store = store
         self.space = space
         self.state = state
         owners = space.triple_owners() if owners is None else owners
-        shard_of_triple = state.triple_shards(owners)
+        self.triple_shard = state.triple_shards(owners).astype(np.int32)
         self.shards: List[TripleStore] = []
         for s in range(state.n_shards):
-            sel = shard_of_triple == s
+            sel = self.triple_shard == s
             self.shards.append(TripleStore(store.triples[sel],
                                            store.dictionary))
 
@@ -87,237 +60,46 @@ class ShardedStore:
         return [sh.n_triples for sh in self.shards]
 
 
-def _primary_shard(q: Query, space: FeatureSpace,
-                   state: PartitionState) -> int:
-    """PPN selection: shard holding the highest number of the query's
-    features, weighted by feature size (Sec. IV)."""
-    feats = space.query_features(q)
-    votes = np.zeros(state.n_shards)
-    for f in feats.tolist():
-        votes[state.feature_to_shard[f]] += 1 + np.log1p(
-            state.feature_sizes[f])
-    return int(np.argmax(votes))
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.query.engine.{old} is deprecated; use {new} "
+                  "(see docs/api.md, 'Plans and executors')",
+                  DeprecationWarning, stacklevel=3)
 
 
-def _match_pattern(shard: TripleStore, pat: Tuple[int, int, int]) -> np.ndarray:
-    s, p, o = pat
-    return shard.match(None if is_var(s) else s,
-                       None if is_var(p) else p,
-                       None if is_var(o) else o)
+def execute(q: Query, sharded, net: NetworkModel | None = None,
+            ) -> Tuple[Dict[int, np.ndarray], ExecStats]:
+    """Deprecated: plan once, then run an executor.
+
+    ``net`` was accepted but never read; ``NetworkModel`` lives solely in
+    ``ExecStats.modeled_time`` now."""
+    _deprecated("execute", "plan.plan(q, kg) + exec.NumpyExecutor().run")
+    return qexec.NumpyExecutor().run(qplan.plan(q, sharded), sharded)
 
 
-def _estimated_count(shards: Sequence[TripleStore], pat) -> int:
-    s, p, o = pat
-    return sum(sh.count(None if is_var(s) else s,
-                        None if is_var(p) else p,
-                        None if is_var(o) else o) for sh in shards)
-
-
-def _join(table: Optional[Dict[int, np.ndarray]], pat, rows: np.ndarray,
-          ) -> Optional[Dict[int, np.ndarray]]:
-    """Hash-join current binding table with matched triples on shared vars."""
-    cols: Dict[int, np.ndarray] = {}
-    for slot_idx, slot in enumerate(pat):
-        if is_var(slot):
-            cols[slot] = rows[:, slot_idx].astype(np.int64)
-    # intra-pattern repeated variable (e.g. (?x, p, ?x)) — filter
-    seen: Dict[int, int] = {}
-    keep = np.ones(rows.shape[0], bool)
-    for slot_idx, slot in enumerate(pat):
-        if is_var(slot):
-            if slot in seen:
-                keep &= rows[:, seen[slot]] == rows[:, slot_idx]
-            else:
-                seen[slot] = slot_idx
-    if not keep.all():
-        cols = {v: c[keep] for v, c in cols.items()}
-    if table is None:
-        return cols
-    shared = [v for v in cols if v in table]
-    if not shared:   # cartesian product — cap to keep memory sane
-        nl, nr = len(next(iter(table.values()))), len(next(iter(cols.values())))
-        li = np.repeat(np.arange(nl), nr)
-        ri = np.tile(np.arange(nr), nl)
-    else:
-        def keyify(colmap, names):
-            ks = np.stack([colmap[v] for v in names], axis=1)
-            # pack up to 2 int32-ish ids into one int64 key
-            key = ks[:, 0]
-            for c in range(1, ks.shape[1]):
-                key = key * np.int64(1 << 31) + ks[:, c]
-            return key
-        lk = keyify(table, shared)
-        rk = keyify(cols, shared)
-        order = np.argsort(rk, kind="stable")
-        rk_sorted = rk[order]
-        lo = np.searchsorted(rk_sorted, lk, side="left")
-        hi = np.searchsorted(rk_sorted, lk, side="right")
-        counts = hi - lo
-        li = np.repeat(np.arange(len(lk)), counts)
-        # expand right indices per left row
-        ri_parts = [order[l:h] for l, h in zip(lo, hi) if h > l]
-        ri = (np.concatenate(ri_parts) if ri_parts
-              else np.empty(0, dtype=np.int64))
-    out: Dict[int, np.ndarray] = {v: c[li] for v, c in table.items()}
-    for v, c in cols.items():
-        if v not in out:
-            out[v] = c[ri]
-    return out
-
-
-def _join_order(patterns: Sequence[Tuple[int, int, int]],
-                counts: Dict[Tuple[int, int, int], int],
-                ) -> List[Tuple[int, int, int]]:
-    """Greedy join order: most selective first, staying connected."""
-    remaining = list(patterns)
-    bound_vars: set = set()
-    order: List[Tuple[int, int, int]] = []
-    while remaining:
-        connected = [p for p in remaining
-                     if any(is_var(s) and s in bound_vars for s in p)]
-        pool = connected if connected and bound_vars else remaining
-        pick = min(pool, key=lambda p: counts[p])
-        order.append(pick)
-        remaining.remove(pick)
-        bound_vars.update(s for s in pick if is_var(s))
-    return order
-
-
-def execute(q: Query, sharded: ShardedStore,
-            net: NetworkModel | None = None) -> Tuple[Dict[int, np.ndarray], ExecStats]:
-    """Run a BGP; returns bindings {var: column} + execution statistics."""
-    stats = ExecStats()
-    ppn = _primary_shard(q, sharded.space, sharded.state)
-    t0 = time.perf_counter()
-
-    counts = {pat: _estimated_count(sharded.shards, pat)
-              for pat in q.patterns}
-    order = _join_order(q.patterns, counts)
-
-    table: Optional[Dict[int, np.ndarray]] = None
-    for pat in order:
-        per_shard = [_match_pattern(sh, pat) for sh in sharded.shards]
-        rows = (np.concatenate(per_shard, axis=0)
-                if any(len(m) for m in per_shard)
-                else np.empty((0, 3), np.int32))
-        # shards scan their slices in parallel: pay the slowest
-        stats.scan_rows_critical += max(
-            (len(m) for m in per_shard), default=0)
-        # federation accounting: matches living off-PPN are SERVICE-shipped
-        for s_idx, m in enumerate(per_shard):
-            if s_idx != ppn and len(m) > 0:
-                stats.messages += 1
-                stats.rows_shipped += len(m)
-                stats.bytes_shipped += m.nbytes
-                if len(q.patterns) > 1:
-                    stats.distributed_joins += 1
-        before = len(next(iter(table.values()))) if table else 0
-        table = _join(table, pat, rows)
-        after = len(next(iter(table.values()))) if table else 0
-        stats.join_rows += before + len(rows) + after
-        if table is not None and len(next(iter(table.values()), ())) == 0:
-            break
-
-    stats.wall_s = time.perf_counter() - t0
-    stats.rows = len(next(iter(table.values()))) if table else 0
-    return table or {}, stats
-
-
-def run_workload(queries: Sequence[Query], sharded: ShardedStore,
+def run_workload(queries: Sequence[Query], sharded,
                  net: NetworkModel | None = None,
                  ) -> Tuple[Dict[str, float], Dict[str, ExecStats]]:
-    """Frequency-weighted execution of a workload; returns per-query modeled
-    times (seconds) and stats. Frequencies scale a query's contribution to
-    the *average* (the paper's T = sum_i T_Qi / f per query, averaged)."""
-    net = net or NetworkModel()
-    times: Dict[str, float] = {}
-    all_stats: Dict[str, ExecStats] = {}
-    for q in queries:
-        _, st = execute(q, sharded, net)
-        times[q.name] = st.modeled_time(net)
-        all_stats[q.name] = st
-    return times, all_stats
+    """Deprecated: use ``exec.run_workload`` (or ``KGService.query_batch``)."""
+    _deprecated("run_workload", "exec.run_workload / KGService.query_batch")
+    return qexec.run_workload(queries, sharded, net=net)
 
 
-def workload_average_time(queries: Sequence[Query], sharded: ShardedStore,
+def workload_average_time(queries: Sequence[Query], sharded,
                           net: NetworkModel | None = None) -> float:
-    """Fig.-5 average: frequency-weighted mean runtime over the workload."""
-    times, _ = run_workload(queries, sharded, net)
-    freqs = np.array([q.frequency for q in queries])
-    vals = np.array([times[q.name] for q in queries])
-    return float((vals * freqs).sum() / freqs.sum())
-
-
-# --------------------------------------------------------------------------- #
-# layout-invariant query profiles (candidate evaluation without re-execution)
-# --------------------------------------------------------------------------- #
-
-@dataclasses.dataclass
-class QueryProfile:
-    """Everything about a query's execution that does NOT depend on the
-    partition layout: the join order, each executed pattern's matched global
-    row ids, the join-pipeline row counts, and the result cardinality.
-
-    Join results are a property of the *global* triple set — shards only
-    change where matches live, i.e. the federation accounting. A profile is
-    computed once per query (one real execution worth of work against the
-    global store) and then prices any candidate ``PartitionState`` with pure
-    bincount arithmetic via :func:`stats_from_profile`."""
-    pattern_rows: List[np.ndarray]     # global row ids per executed pattern
-    join_rows: int
-    rows: int
-    n_patterns: int                    # len(q.patterns), for dj accounting
+    """Deprecated: use ``exec.workload_average_time``."""
+    _deprecated("workload_average_time", "exec.workload_average_time")
+    return qexec.workload_average_time(queries, sharded, net=net)
 
 
 def profile_query(q: Query, store: TripleStore) -> QueryProfile:
-    """One real execution against the global store, recording row ids."""
-    counts = {pat: store.count(None if is_var(pat[0]) else pat[0],
-                               None if is_var(pat[1]) else pat[1],
-                               None if is_var(pat[2]) else pat[2])
-              for pat in q.patterns}
-    order = _join_order(q.patterns, counts)
-
-    prof = QueryProfile(pattern_rows=[], join_rows=0, rows=0,
-                        n_patterns=len(q.patterns))
-    table: Optional[Dict[int, np.ndarray]] = None
-    for pat in order:
-        s, p, o = pat
-        idx = store.match_indices(None if is_var(s) else s,
-                                  None if is_var(p) else p,
-                                  None if is_var(o) else o)
-        prof.pattern_rows.append(np.asarray(idx, dtype=np.int64))
-        rows = store.triples[idx]
-        before = len(next(iter(table.values()))) if table else 0
-        table = _join(table, pat, rows)
-        after = len(next(iter(table.values()))) if table else 0
-        prof.join_rows += before + len(rows) + after
-        if table is not None and len(next(iter(table.values()), ())) == 0:
-            break
-    prof.rows = len(next(iter(table.values()))) if table else 0
-    return prof
+    """Deprecated: profiles are derived from plans now."""
+    _deprecated("profile_query", "exec.profile_from_plan(plan.plan(q, store))")
+    return qexec.profile_from_plan(qplan.plan(q, store), store)
 
 
 def stats_from_profile(q: Query, prof: QueryProfile, space: FeatureSpace,
                        state: PartitionState,
                        triple_shard: np.ndarray) -> ExecStats:
-    """Re-account a profiled query under a candidate layout.
-
-    Reproduces ``execute``'s federation statistics exactly — same PPN rule,
-    same per-shard scan/shipping arithmetic — without re-running any joins.
-    ``triple_shard`` maps every global triple row to its candidate shard."""
-    stats = ExecStats(join_rows=prof.join_rows, rows=prof.rows)
-    ppn = _primary_shard(q, space, state)
-    multi = prof.n_patterns > 1
-    for idx in prof.pattern_rows:
-        per_shard = np.bincount(triple_shard[idx], minlength=state.n_shards)
-        stats.scan_rows_critical += int(per_shard.max()) if len(idx) else 0
-        off = per_shard.copy()
-        off[ppn] = 0
-        nz = int((off > 0).sum())
-        shipped = int(off.sum())
-        stats.messages += nz
-        stats.rows_shipped += shipped
-        stats.bytes_shipped += shipped * TRIPLE_BYTES
-        if multi:
-            stats.distributed_joins += nz
-    return stats
+    """Deprecated: use ``plan.stats_from_profile``."""
+    _deprecated("stats_from_profile", "plan.stats_from_profile")
+    return qplan.stats_from_profile(q, prof, space, state, triple_shard)

@@ -1,0 +1,584 @@
+"""Pluggable query executors over the ``QueryPlan`` IR.
+
+Two backends behind one ``Executor`` protocol:
+
+* :class:`NumpyExecutor` — the reference semantics: per-shard pattern
+  matching, numpy hash joins, python-level federation accounting. Stats are
+  byte-identical to the pre-split ``engine.execute``.
+* :class:`JaxExecutor` — the batched backend: patterns are matched once
+  against the global store (results deduplicated across the whole batch),
+  the hash-join key packing / probe runs as jitted jax kernels (dispatched
+  per the ``kernels/jaccard/ops.py`` idiom: compiled on TPU, same-math
+  numpy fallback elsewhere, forceable via ``probe_kernel=``), and the
+  federation accounting for every distinct pattern in the window is ONE
+  dispatched scatter-add (``bincount`` over ``triple_shard[match]``
+  segments) instead of a python loop per shard per query. Bindings and
+  stats match the numpy backend exactly (modulo row order and the
+  informational ``wall_s``).
+
+Execution model mirrors the paper's federated SPARQL (Sec. IV): a query runs
+at its Primary Processing Node (PPN) and every triple pattern whose matches
+live on other shards is a SERVICE call whose bindings are shipped to the PPN.
+Joins execute for real; *time* is modeled by :class:`NetworkModel` (this
+container has no cluster fabric), which lives solely in
+``ExecStats.modeled_time`` — executors never take a network argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
+    runtime_checkable
+
+import numpy as np
+
+from repro.core.migration import TRIPLE_BYTES
+from repro.query import plan as qplan
+from repro.query.pattern import Query, is_var
+
+# Cross products ("cartesian" plan ops) materialize |left| x |right| rows;
+# exceeding this cap raises JoinCapExceeded instead of exhausting memory.
+DEFAULT_MAX_JOIN_ROWS = 50_000_000
+
+
+class JoinCapExceeded(RuntimeError):
+    """A cartesian-product join step would materialize more rows than the
+    executor's ``max_join_rows`` cap."""
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    """Deterministic cluster cost model.
+
+    Queries execute for real (joins — results are exact), but their *time*
+    is modeled, because this container has no cluster fabric and wall-clock
+    noise would swamp the federation costs the paper's technique optimizes.
+    The model matches the paper's deployment shape: per-shard scans run in
+    parallel (max, not sum), SERVICE calls pay a round-trip latency, and
+    shipped bindings pay serialization+wire time (federated SPARQL over HTTP
+    is slow — effective ~20 MB/s)."""
+    latency_s: float = 0.050          # SERVICE round trip incl. query setup
+    bandwidth_Bps: float = 20e6       # effective federated-result throughput
+    scan_rows_per_s: float = 5e6      # Virtuoso-ish index scan rate
+    join_rows_per_s: float = 5e6      # hash-join probe rate at the PPN
+    row_bytes: float = 60.0           # serialized SPARQL result row (HTTP/XML)
+
+    def time(self, messages: int, rows_shipped: int) -> float:
+        return (messages * self.latency_s
+                + rows_shipped * self.row_bytes / self.bandwidth_Bps)
+
+
+@dataclasses.dataclass
+class ExecStats:
+    scan_rows_critical: int = 0        # sum over patterns of max-shard rows
+    join_rows: int = 0                 # rows flowing through PPN joins
+    distributed_joins: int = 0
+    rows_shipped: int = 0              # binding rows crossing shards
+    bytes_shipped: int = 0             # rows_shipped * TRIPLE_BYTES
+    messages: int = 0
+    rows: int = 0
+    cartesian_rows: int = 0            # cross-product rows materialized
+    wall_s: float = 0.0                # actual local execution time (info)
+
+    # every field that must agree between backends / profile re-accounting
+    COMPARABLE = ("scan_rows_critical", "join_rows", "distributed_joins",
+                  "rows_shipped", "bytes_shipped", "messages", "rows",
+                  "cartesian_rows")
+
+    def modeled_time(self, net: NetworkModel | None = None) -> float:
+        net = net or NetworkModel()
+        return (self.scan_rows_critical / net.scan_rows_per_s
+                + self.join_rows / net.join_rows_per_s
+                + net.time(self.messages, self.rows_shipped))
+
+
+Bindings = Dict[int, np.ndarray]
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Backend protocol: run one plan (or a whole workload window) against a
+    sharded KG (``engine.ShardedStore`` or ``api.PartitionedKG``)."""
+
+    name: str
+
+    def run(self, plan: qplan.QueryPlan, kg) -> Tuple[Bindings, ExecStats]:
+        ...
+
+    def run_batch(self, plans: Sequence[qplan.QueryPlan], kg,
+                  ) -> List[Tuple[Bindings, ExecStats]]:
+        ...
+
+
+# --------------------------------------------------------------------------- #
+# shared join machinery (numpy reference semantics)
+# --------------------------------------------------------------------------- #
+
+def _pattern_cols(pat, rows: np.ndarray) -> Bindings:
+    """Variable columns from matched triples, with intra-pattern repeated
+    variables (e.g. ``(?x, p, ?x)``) filtered."""
+    cols: Bindings = {}
+    for slot_idx, slot in enumerate(pat):
+        if is_var(slot):
+            cols[slot] = rows[:, slot_idx].astype(np.int64)
+    seen: Dict[int, int] = {}
+    keep = np.ones(rows.shape[0], bool)
+    for slot_idx, slot in enumerate(pat):
+        if is_var(slot):
+            if slot in seen:
+                keep &= rows[:, seen[slot]] == rows[:, slot_idx]
+            else:
+                seen[slot] = slot_idx
+    if not keep.all():
+        cols = {v: c[keep] for v, c in cols.items()}
+    return cols
+
+
+def _cartesian_indices(nl: int, nr: int, stats: ExecStats,
+                       max_rows: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Cross-product (left, right) index pairs, capped."""
+    produced = nl * nr
+    if produced > max_rows:
+        raise JoinCapExceeded(
+            f"cartesian join would materialize {produced} rows "
+            f"({nl} x {nr}), above the {max_rows}-row cap; "
+            "raise Executor(max_join_rows=...) or add a shared variable")
+    stats.cartesian_rows += produced
+    li = np.repeat(np.arange(nl), nr)
+    ri = np.tile(np.arange(nr), nl)
+    return li, ri
+
+
+def _key_columns(table: Bindings, cols: Bindings, shared: Sequence[int],
+                 ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+    """Shared-var key columns, reduced to at most two int64 columns.
+
+    Two dictionary ids (< 2^31) pack exactly into one int64; with three or
+    more shared variables the leading columns are first combined and
+    dense-ranked over the union of both sides, so the packed key never
+    overflows (a straight base-2^31 pack of three columns wraps int64 and
+    hash-equates rows whose leading variable differs by a multiple of 4)."""
+    lcs = [table[v] for v in shared]
+    rcs = [cols[v] for v in shared]
+    while len(lcs) > 2:
+        lkey = lcs[0] * np.int64(1 << 31) + lcs[1]
+        rkey = rcs[0] * np.int64(1 << 31) + rcs[1]
+        _, inv = np.unique(np.concatenate([lkey, rkey]), return_inverse=True)
+        lcs = [inv[:len(lkey)].astype(np.int64)] + lcs[2:]
+        rcs = [inv[len(lkey):].astype(np.int64)] + rcs[2:]
+    return lcs, rcs
+
+
+def _pack_key_list(key_cols: Sequence[np.ndarray]) -> np.ndarray:
+    key = key_cols[0]
+    for c in key_cols[1:]:
+        key = key * np.int64(1 << 31) + c
+    return key
+
+
+def _join_numpy(table: Optional[Bindings], pat, rows: np.ndarray,
+                stats: ExecStats, max_rows: int) -> Optional[Bindings]:
+    """Hash-join current binding table with matched triples on shared vars."""
+    cols = _pattern_cols(pat, rows)
+    if table is None:
+        return cols
+    shared = [v for v in cols if v in table]
+    if not shared:
+        nl = len(next(iter(table.values())))
+        nr = len(next(iter(cols.values())))
+        li, ri = _cartesian_indices(nl, nr, stats, max_rows)
+    else:
+        lcs, rcs = _key_columns(table, cols, shared)
+        lk = _pack_key_list(lcs)
+        rk = _pack_key_list(rcs)
+        order = np.argsort(rk, kind="stable")
+        rk_sorted = rk[order]
+        lo = np.searchsorted(rk_sorted, lk, side="left")
+        hi = np.searchsorted(rk_sorted, lk, side="right")
+        counts = hi - lo
+        li = np.repeat(np.arange(len(lk)), counts)
+        ri_parts = [order[l:h] for l, h in zip(lo, hi) if h > l]
+        ri = (np.concatenate(ri_parts) if ri_parts
+              else np.empty(0, dtype=np.int64))
+    out: Bindings = {v: c[li] for v, c in table.items()}
+    for v, c in cols.items():
+        if v not in out:
+            out[v] = c[ri]
+    return out
+
+
+def _table_len(table: Optional[Bindings]) -> int:
+    return len(next(iter(table.values()))) if table else 0
+
+
+# --------------------------------------------------------------------------- #
+# numpy backend — reference semantics
+# --------------------------------------------------------------------------- #
+
+class NumpyExecutor:
+    """Per-shard matching + numpy joins; the reference backend."""
+
+    name = "numpy"
+
+    def __init__(self, max_join_rows: int = DEFAULT_MAX_JOIN_ROWS):
+        self.max_join_rows = max_join_rows
+
+    def run(self, plan: qplan.QueryPlan, kg) -> Tuple[Bindings, ExecStats]:
+        stats = ExecStats()
+        t0 = time.perf_counter()
+        shards = kg.shards
+        multi = plan.n_patterns > 1
+        table: Optional[Bindings] = None
+        for op in plan.ops:
+            s, p, o = op.pattern
+            per_shard = [sh.match(None if is_var(s) else s,
+                                  None if is_var(p) else p,
+                                  None if is_var(o) else o) for sh in shards]
+            rows = (np.concatenate(per_shard, axis=0)
+                    if any(len(m) for m in per_shard)
+                    else np.empty((0, 3), np.int32))
+            # shards scan their slices in parallel: pay the slowest
+            stats.scan_rows_critical += max(
+                (len(m) for m in per_shard), default=0)
+            # federation accounting: matches living off-PPN are shipped
+            for s_idx, m in enumerate(per_shard):
+                if s_idx != plan.ppn and len(m) > 0:
+                    stats.messages += 1
+                    stats.rows_shipped += len(m)
+                    stats.bytes_shipped += len(m) * TRIPLE_BYTES
+                    if multi:
+                        stats.distributed_joins += 1
+            before = _table_len(table)
+            table = _join_numpy(table, op.pattern, rows, stats,
+                                self.max_join_rows)
+            stats.join_rows += before + len(rows) + _table_len(table)
+            if table is not None and _table_len(table) == 0:
+                break
+        stats.wall_s = time.perf_counter() - t0
+        stats.rows = _table_len(table)
+        return table or {}, stats
+
+    def run_batch(self, plans: Sequence[qplan.QueryPlan], kg,
+                  ) -> List[Tuple[Bindings, ExecStats]]:
+        return [self.run(p, kg) for p in plans]
+
+
+# --------------------------------------------------------------------------- #
+# jax backend — batched execution
+# --------------------------------------------------------------------------- #
+
+_jax_kernel_cache: dict = {}
+
+
+def _jax_join_kernels():
+    """Two jitted kernels shared by every join of every batch:
+
+    * ``pack``   — vectorized key packing: (N, K) shared-var columns ->
+      one int64 key per row (the hash-join key);
+    * ``search`` — the hash probe: binary-search every (packed) probe key
+      against the sorted build side.
+
+    Inputs are padded to power-of-two buckets so the jit compile cache is
+    reused across joins. The build-side sort itself stays on the host
+    (XLA's CPU sort is comparator-based and loses badly to ``np.argsort``);
+    everything vectorizable runs in the kernels."""
+    import jax
+    import jax.numpy as jnp
+
+    if not _jax_kernel_cache:
+        @jax.jit
+        def pack(cols):
+            key = cols[:, 0]
+            for c in range(1, cols.shape[1]):
+                key = key * jnp.int64(1 << 31) + cols[:, c]
+            return key
+
+        @jax.jit
+        def search(rk_sorted, lk):
+            lo = jnp.searchsorted(rk_sorted, lk, side="left")
+            hi = jnp.searchsorted(rk_sorted, lk, side="right")
+            return lo, hi
+
+        _jax_kernel_cache.update(pack=pack, search=search)
+    return _jax_kernel_cache["pack"], _jax_kernel_cache["search"]
+
+
+_INT64_MAX = np.iinfo(np.int64).max
+
+
+def _pad_pow2(a: np.ndarray, fill=0, min_size: int = 16) -> np.ndarray:
+    """Pad axis 0 to the next power of two (stable jit shape buckets)."""
+    n = a.shape[0]
+    m = max(min_size, 1 << max(n - 1, 0).bit_length())
+    if m == n:
+        return a
+    out = np.full((m,) + a.shape[1:], fill, a.dtype)
+    out[:n] = a
+    return out
+
+
+def _probe(table: Bindings, cols: Bindings, shared, nl: int, nr: int,
+           use_kernel: bool) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Hash-probe: pack shared-var columns into int64 keys, sort the build
+    side, binary-search every probe key. Returns ``(order, lo, counts)``.
+
+    Kernel/fallback dispatch follows the idiom of the pallas kernels under
+    ``src/repro/kernels`` (see ``jaccard/ops.py``): on TPU the jitted jax
+    kernels run compiled; elsewhere the same math runs in numpy unless the
+    kernel path is forced (tests force it to pin bit-equality). Inputs to
+    the kernels are padded to power-of-two buckets so the jit cache is
+    reused across joins; the build-side sort always stays on the host
+    (XLA's CPU sort is comparator-based and loses badly to ``np.argsort``)."""
+    lcs, rcs = _key_columns(table, cols, shared)
+    if use_kernel:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            pack, search = _jax_join_kernels()
+            lk = np.asarray(pack(_pad_pow2(np.stack(lcs, axis=1))))[:nl]
+            rk = np.asarray(pack(_pad_pow2(np.stack(rcs, axis=1))))[:nr]
+            order = np.argsort(rk, kind="stable")
+            # pad the sorted build side with int64-max so padding never
+            # binary-searches below a real key; clamp to nr for keys == max
+            lo_j, hi_j = search(_pad_pow2(rk[order], fill=_INT64_MAX),
+                                _pad_pow2(lk, fill=_INT64_MAX))
+        lo = np.minimum(np.asarray(lo_j)[:nl], nr)
+        hi = np.minimum(np.asarray(hi_j)[:nl], nr)
+    else:
+        lk = _pack_key_list(lcs)
+        rk = _pack_key_list(rcs)
+        order = np.argsort(rk, kind="stable")
+        rk_sorted = rk[order]
+        lo = np.searchsorted(rk_sorted, lk, side="left")
+        hi = np.searchsorted(rk_sorted, lk, side="right")
+    return order, lo, hi - lo
+
+
+def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
+              stats: ExecStats, max_rows: int, use_kernel: bool,
+              cols: Optional[Bindings] = None) -> Optional[Bindings]:
+    """Same join semantics as :func:`_join_numpy`, with the key packing and
+    the searchsorted hash-probe vectorized via :func:`_probe` (int64 math
+    under ``enable_x64`` — packed keys overflow int32). The data-dependent
+    ragged expansion stays in numpy addressing arithmetic."""
+    cols = _pattern_cols(pat, rows) if cols is None else cols
+    if table is None:
+        return cols
+    shared = [v for v in cols if v in table]
+    if not shared:
+        nl, nr = _table_len(table), len(next(iter(cols.values())))
+        li, ri = _cartesian_indices(nl, nr, stats, max_rows)
+    else:
+        nl, nr = _table_len(table), len(next(iter(cols.values())))
+        order, lo, counts = _probe(table, cols, shared, nl, nr, use_kernel)
+        # per-left-row expansion of order[lo:hi] (matches the numpy backend's
+        # pair enumeration order exactly)
+        total = int(counts.sum())
+        li = np.repeat(np.arange(nl), counts)
+        starts = np.cumsum(counts) - counts
+        offs = np.arange(total) - np.repeat(starts, counts)
+        ri = order[np.repeat(lo, counts) + offs]
+    out: Bindings = {v: c[li] for v, c in table.items()}
+    for v, c in cols.items():
+        if v not in out:
+            out[v] = c[ri]
+    return out
+
+
+def _on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def _federation_bincounts(triple_shard: np.ndarray,
+                          idx_list: Sequence[np.ndarray],
+                          n_shards: int) -> np.ndarray:
+    """(n_patterns, n_shards) match counts per shard for every distinct
+    executed pattern of the batch — one jax scatter-add dispatch for the
+    whole workload window."""
+    import jax.numpy as jnp
+
+    if not idx_list:
+        return np.zeros((0, n_shards), np.int64)
+    lens = np.array([len(i) for i in idx_list], np.int64)
+    if lens.sum() == 0:
+        return np.zeros((len(idx_list), n_shards), np.int64)
+    seg = np.repeat(np.arange(len(idx_list)), lens)
+    flat = np.concatenate([np.asarray(i, np.int64) for i in idx_list])
+    shard_ids = triple_shard[flat].astype(np.int32)
+    out = jnp.zeros((len(idx_list), n_shards), jnp.int32)
+    out = out.at[jnp.asarray(seg), jnp.asarray(shard_ids)].add(1)
+    return np.asarray(out).astype(np.int64)
+
+
+class JaxExecutor:
+    """Batched backend: global-store matching with pattern results
+    (indices, rows, variable columns) deduplicated across the whole window,
+    jax key-packing/probe kernels for the hash joins, and one scatter-add
+    dispatch for the batch's federation accounting over distinct patterns.
+
+    ``probe_kernel`` follows the repo's kernel-dispatch idiom (see
+    ``kernels/jaccard/ops.py``): ``None`` = auto (compiled kernels on TPU,
+    same-math numpy elsewhere), ``True``/``False`` force the path — the
+    equivalence tests force ``True`` to pin the kernels' bit-equality."""
+
+    name = "jax"
+
+    def __init__(self, max_join_rows: int = DEFAULT_MAX_JOIN_ROWS,
+                 probe_kernel: bool | None = None):
+        self.max_join_rows = max_join_rows
+        self.probe_kernel = probe_kernel
+
+    def run(self, plan: qplan.QueryPlan, kg) -> Tuple[Bindings, ExecStats]:
+        return self.run_batch([plan], kg)[0]
+
+    def run_batch(self, plans: Sequence[qplan.QueryPlan], kg,
+                  ) -> List[Tuple[Bindings, ExecStats]]:
+        store = kg.store
+        triple_shard = kg.triple_shard
+        use_kernel = (self.probe_kernel if self.probe_kernel is not None
+                      else _on_tpu())
+        # global-store matches deduplicated across the whole window:
+        # pattern -> (row ids, matched triples, variable columns)
+        match_cache: Dict[tuple, tuple] = {}
+
+        results: List[Tuple[Bindings, ExecStats]] = []
+        executed: List[Tuple[int, tuple]] = []         # (query, pattern)
+        for qi, plan in enumerate(plans):
+            stats = ExecStats()
+            t0 = time.perf_counter()
+            table: Optional[Bindings] = None
+            ops_run = 0
+            for op in plan.ops:
+                hit = match_cache.get(op.pattern)
+                if hit is None:
+                    s, p, o = op.pattern
+                    idx = store.match_indices(None if is_var(s) else s,
+                                              None if is_var(p) else p,
+                                              None if is_var(o) else o)
+                    rows = store.triples[idx]
+                    hit = (idx, rows, _pattern_cols(op.pattern, rows))
+                    match_cache[op.pattern] = hit
+                idx, rows, cols = hit
+                executed.append((qi, op.pattern))
+                ops_run += 1
+                before = _table_len(table)
+                table = _join_jax(table, op.pattern, rows, stats,
+                                  self.max_join_rows, use_kernel, cols=cols)
+                stats.join_rows += before + len(rows) + _table_len(table)
+                if table is not None and _table_len(table) == 0:
+                    break
+            if table is not None and ops_run == 1:
+                # single-op result IS the cached column dict: copy so two
+                # queries in the window never alias the same binding arrays
+                table = {v: c.copy() for v, c in table.items()}
+            stats.rows = _table_len(table)
+            stats.wall_s = time.perf_counter() - t0
+            results.append((table or {}, stats))
+
+        # one dispatched batch prices the federation of every distinct
+        # pattern executed in the window
+        t0 = time.perf_counter()
+        distinct = list(match_cache)
+        counts = _federation_bincounts(
+            triple_shard, [match_cache[pat][0] for pat in distinct],
+            kg.n_shards)
+        count_of = dict(zip(distinct, counts))
+        for qi, pat in executed:
+            stats = results[qi][1]
+            plan = plans[qi]
+            per_shard = count_of[pat]
+            stats.scan_rows_critical += int(per_shard.max())
+            off = per_shard.copy()
+            off[plan.ppn] = 0
+            nz = int((off > 0).sum())
+            stats.messages += nz
+            stats.rows_shipped += int(off.sum())
+            stats.bytes_shipped += int(off.sum()) * TRIPLE_BYTES
+            if plan.n_patterns > 1:
+                stats.distributed_joins += nz
+        if plans:
+            acct = (time.perf_counter() - t0) / len(plans)
+            for _, stats in results:
+                stats.wall_s += acct
+        return results
+
+
+_EXECUTORS = {"numpy": NumpyExecutor, "jax": JaxExecutor}
+
+
+def get_executor(spec: "str | Executor | None") -> Executor:
+    """Resolve an executor: an instance passes through, a name (``"numpy"`` /
+    ``"jax"``) constructs the backend, ``None`` means the numpy reference."""
+    if spec is None:
+        return NumpyExecutor()
+    if isinstance(spec, str):
+        try:
+            return _EXECUTORS[spec]()
+        except KeyError:
+            raise ValueError(f"unknown executor {spec!r}; "
+                             f"expected one of {sorted(_EXECUTORS)}") from None
+    return spec
+
+
+# --------------------------------------------------------------------------- #
+# profiles (derived from plans) + workload helpers
+# --------------------------------------------------------------------------- #
+
+def profile_from_plan(plan: qplan.QueryPlan, store,
+                      max_join_rows: int = DEFAULT_MAX_JOIN_ROWS,
+                      ) -> qplan.QueryProfile:
+    """One real execution of ``plan`` against the global store, recording the
+    layout-invariant artifacts (matched row ids, join-pipeline counts).
+    ``max_join_rows`` should match the serving executor's cap so profiling
+    never rejects a workload the executor was configured to allow."""
+    prof = qplan.QueryProfile(pattern_rows=[], join_rows=0, rows=0,
+                              n_patterns=plan.n_patterns)
+    stats = ExecStats()
+    table: Optional[Bindings] = None
+    for op in plan.ops:
+        s, p, o = op.pattern
+        idx = store.match_indices(None if is_var(s) else s,
+                                  None if is_var(p) else p,
+                                  None if is_var(o) else o)
+        prof.pattern_rows.append(np.asarray(idx, dtype=np.int64))
+        rows = store.triples[idx]
+        before = _table_len(table)
+        table = _join_numpy(table, op.pattern, rows, stats, max_join_rows)
+        prof.join_rows += before + len(rows) + _table_len(table)
+        if table is not None and _table_len(table) == 0:
+            break
+    prof.rows = _table_len(table)
+    prof.cartesian_rows = stats.cartesian_rows
+    return prof
+
+
+def _plans_for(queries: Sequence[Query], kg) -> List[qplan.QueryPlan]:
+    if hasattr(kg, "plan"):           # PartitionedKG: cached per (query, store)
+        return [kg.plan(q) for q in queries]
+    return [qplan.plan(q, kg) for q in queries]
+
+
+def run_workload(queries: Sequence[Query], kg,
+                 executor: "str | Executor | None" = None,
+                 net: NetworkModel | None = None,
+                 ) -> Tuple[Dict[str, float], Dict[str, ExecStats]]:
+    """Execute a workload window in one batch; returns per-query modeled
+    times (seconds) and stats, keyed by query name."""
+    ex = get_executor(executor)
+    net = net or NetworkModel()
+    plans = _plans_for(queries, kg)
+    results = ex.run_batch(plans, kg)
+    times = {q.name: st.modeled_time(net)
+             for q, (_, st) in zip(queries, results)}
+    all_stats = {q.name: st for q, (_, st) in zip(queries, results)}
+    return times, all_stats
+
+
+def workload_average_time(queries: Sequence[Query], kg,
+                          executor: "str | Executor | None" = None,
+                          net: NetworkModel | None = None) -> float:
+    """Fig.-5 average: frequency-weighted mean runtime over the workload."""
+    times, _ = run_workload(queries, kg, executor, net)
+    freqs = np.array([q.frequency for q in queries])
+    vals = np.array([times[q.name] for q in queries])
+    return float((vals * freqs).sum() / freqs.sum())

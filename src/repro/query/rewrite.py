@@ -8,12 +8,13 @@ the examples) exactly as the paper's Query Rewriter would emit it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.core.features import FeatureSpace
 from repro.core.partition import PartitionState
 from repro.graph.triples import Dictionary
 from repro.query.pattern import Query, is_var
+from repro.query.plan import pattern_home, primary_shard
 
 
 def _term(slot: int, d: Dictionary | None) -> str:
@@ -27,25 +28,11 @@ def _term(slot: int, d: Dictionary | None) -> str:
     return f"<e{slot}>"
 
 
-def pattern_home(pat: Tuple[int, int, int], space: FeatureSpace,
-                 state: PartitionState) -> int:
-    """Shard homing a pattern's feature (PO if tracked, else P)."""
-    s, p, o = pat
-    if is_var(p):
-        return -1        # unbound predicate: broadcast
-    if not is_var(o):
-        po = space.po_index(p, o)
-        if po is not None:
-            return int(state.feature_to_shard[po])
-    return int(state.feature_to_shard[space.p_index(p)])
-
-
 def federated_sparql(q: Query, space: FeatureSpace, state: PartitionState,
                      dictionary: Dictionary | None = None,
                      endpoints: List[str] | None = None) -> str:
     """Render the federated form of ``q`` under the current PMeta."""
-    from repro.query.engine import _primary_shard
-    ppn = _primary_shard(q, space, state)
+    ppn = primary_shard(q, space, state)
     eps = endpoints or [f"http://node{i}/sparql" for i in range(state.n_shards)]
     head = " ".join(f"?v{-v - 1}" for v in q.variables())
     lines = [f"SELECT {head} WHERE {{"]
@@ -63,8 +50,7 @@ def federated_sparql(q: Query, space: FeatureSpace, state: PartitionState,
 def service_counts(q: Query, space: FeatureSpace,
                    state: PartitionState) -> Dict[str, int]:
     """How many patterns run locally at the PPN vs. via SERVICE calls."""
-    from repro.query.engine import _primary_shard
-    ppn = _primary_shard(q, space, state)
+    ppn = primary_shard(q, space, state)
     local = remote = 0
     for pat in q.patterns:
         home = pattern_home(pat, space, state)

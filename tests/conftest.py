@@ -15,6 +15,16 @@ from repro.core.features import FeatureSpace
 from repro.graph import lubm
 
 
+def canon_bindings(bindings):
+    """Canonical form of an executor's bindings ({var: column}) for
+    order-insensitive equality across backends/layouts."""
+    if not bindings:
+        return []
+    keys = sorted(bindings)
+    return sorted(map(tuple, np.stack([bindings[k] for k in keys],
+                                      axis=1).tolist()))
+
+
 @pytest.fixture(scope="session")
 def small_lubm():
     """LUBM(1): ~150k triples — shared across tests."""

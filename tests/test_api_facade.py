@@ -1,18 +1,22 @@
-"""repro.api: incremental shard views vs full rebuild, strategy plugging,
-and service/facade invariants."""
+"""repro.api: incremental shard views vs full rebuild, strategy/executor
+plugging, plan-cache behaviour, and service/facade invariants."""
 import numpy as np
 import pytest
 
-from repro.api import (AWAPartitioner, HashPartitioner, KGService,
-                       Partitioner, WawPartitioner)
+from conftest import canon_bindings
+from repro.api import (AWAPartitioner, HashPartitioner, JaxExecutor,
+                       KGService, NumpyExecutor, Partitioner, WawPartitioner)
 from repro.core.partition import hash_partition
-from repro.query import engine
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+from repro.query.engine import ShardedStore
+
 
 
 def _assert_views_match_full_rebuild(kg):
     """Every materialized shard view must equal a from-scratch rebuild of the
     same PartitionState (triples in identical global order)."""
-    full = engine.ShardedStore(kg.store, kg.space, kg.state)
+    full = ShardedStore(kg.store, kg.space, kg.state)
     for s, (inc, ref) in enumerate(zip(kg.shards, full.shards)):
         assert np.array_equal(inc.triples, ref.triples), f"shard {s} diverged"
     assert sum(kg.shard_sizes()) == kg.store.n_triples
@@ -38,24 +42,87 @@ def test_incremental_views_equal_full_rebuild_across_rounds(small_lubm):
 
 def test_profile_accounting_matches_execution(small_lubm):
     """Candidate pricing (stats_from_profile over cached QueryProfiles) must
-    reproduce engine.execute's federation statistics exactly, under both the
+    reproduce the executor's federation statistics exactly, under both the
     live layout and an arbitrary other one."""
     svc = KGService.from_dataset(small_lubm, n_shards=4)
     kg = svc.bootstrap(small_lubm.base_workload())
     queries = small_lubm.extended_workload()
     layouts = [kg.state, hash_partition(kg.state.feature_sizes, 4, seed=3)]
-    fields = ("scan_rows_critical", "join_rows", "distributed_joins",
-              "rows_shipped", "bytes_shipped", "messages", "rows")
     for layout in layouts:
-        sh = engine.ShardedStore(small_lubm.store, svc.space, layout)
-        ts = layout.triple_shards(kg.owners).astype(np.int32)
+        sh = ShardedStore(small_lubm.store, svc.space, layout)
         for q in queries:
-            _, real = engine.execute(q, sh)
-            est = engine.stats_from_profile(q, kg.profile(q), svc.space,
-                                            layout, ts)
-            for f in fields:
+            _, real = NumpyExecutor().run(qplan.plan(q, sh), sh)
+            est = qplan.stats_from_profile(q, kg.profile(q), svc.space,
+                                           layout, sh.triple_shard)
+            for f in qexec.ExecStats.COMPARABLE:
                 assert getattr(real, f) == getattr(est, f), (q.name, f)
             assert abs(real.modeled_time() - est.modeled_time()) < 1e-12
+
+
+def test_jax_batch_matches_numpy_per_query_and_plan_cache(small_lubm):
+    """Acceptance equivalence suite: for a fixed workload, JaxExecutor batch
+    results (bindings + stats) match NumpyExecutor per-query results exactly,
+    and one plan per (query, store) is built across an adaptation round."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4, executor="numpy")
+    kg = svc.bootstrap(small_lubm.base_workload())
+    workload = small_lubm.extended_workload()
+
+    per_query = [svc.query(q) for q in workload]          # numpy, one at a time
+    assert kg.plan_builds == len(workload)
+
+    svc.executor = JaxExecutor(probe_kernel=True)         # pin the kernels
+    batch = svc.query_batch(workload)                     # jax, one batch
+    for q, (bn, sn), (bj, sj) in zip(workload, per_query, batch):
+        assert canon_bindings(bn) == canon_bindings(bj), q.name
+        for f in qexec.ExecStats.COMPARABLE:
+            assert getattr(sn, f) == getattr(sj, f), (q.name, f)
+
+    # the whole second pass was served from the plan cache
+    assert kg.plan_builds == len(workload)
+    assert kg.plan_hits == len(workload)
+
+    # an adaptation round prices every candidate from cached plans/profiles:
+    # still exactly one plan built per (query, store) — until the commit
+    # invalidates the cache (the layout, hence PPN, changed)
+    builds_before = kg.plan_builds
+    svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert kg.plan_builds == builds_before
+    svc.query_batch(workload)
+    assert kg.plan_builds == builds_before + len(workload)
+
+
+def test_plan_cache_invalidated_by_commit_and_sync(small_lubm):
+    """commit() and sync_universe() must drop cached plans: the PPN vote
+    depends on the layout and the feature universe."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    q = small_lubm.queries["Q9"]
+
+    p0 = kg.plan(q)
+    assert kg.plan(q) is p0                       # cached
+    assert kg.plan_hits == 1
+
+    # move every feature the query votes with to another shard: the cached
+    # plan would keep a stale PPN
+    new_state = kg.state.copy()
+    feats = svc.space.query_features(q)
+    dst = (p0.ppn + 1) % kg.n_shards
+    new_state.feature_to_shard[feats] = dst
+    kg.commit(new_state)
+
+    p1 = kg.plan(q)
+    assert p1 is not p0
+    assert p1.ppn == dst
+    assert qplan.plan(q, kg).ppn == dst           # agrees with a fresh build
+
+    # universe growth (new tracked PO features) also invalidates
+    kg.sync_universe()                            # no growth: cache survives
+    assert kg.plan(q) is p1
+    svc.space.track_workload(
+        small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert svc.space.n_features > len(kg.state.feature_to_shard)
+    kg.sync_universe()
+    assert kg.plan(q) is not p1
 
 
 def test_measure_candidate_is_side_effect_free(small_lubm):
@@ -117,6 +184,26 @@ def test_partitioner_strategies_interchangeable(small_lubm, make):
     _, stats = svc.query(small_lubm.queries["Q6"])
     assert stats.rows > 0
     assert svc.avg_execution_time() > 0
+
+
+@pytest.mark.parametrize("executor", ["numpy", "jax"])
+def test_executor_strategies_interchangeable(small_lubm, executor):
+    """Both backends satisfy the Executor protocol and serve the loop."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4, executor=executor)
+    assert isinstance(svc.executor, qexec.Executor)
+    assert svc.executor.name == executor
+    svc.bootstrap(small_lubm.base_workload())
+    _, stats = svc.query(small_lubm.queries["Q6"])
+    assert stats.rows > 0
+    results = svc.query_batch([small_lubm.queries["Q1"],
+                               small_lubm.queries["Q6"]])
+    assert len(results) == 2
+    assert svc.avg_execution_time() > 0
+
+
+def test_unknown_executor_rejected(small_lubm):
+    with pytest.raises(ValueError, match="unknown executor"):
+        KGService.from_dataset(small_lubm, n_shards=4, executor="spark")
 
 
 def test_non_adaptive_strategy_rejects_adapt(small_lubm):

@@ -46,7 +46,8 @@ def test_adapt_single_cut_fallback(small_lubm):
 
 def test_guard_never_regresses_objective(lubm3):
     """Whatever cut wins, the accept/revert guard keeps dj monotone."""
-    from repro.query import engine
+    from repro.query import exec as qexec
+    from repro.query.engine import ShardedStore
     space = FeatureSpace(lubm3.store,
                          type_predicate=lubm3.dictionary.lookup("rdf:type"))
     ctrl = AWAPartController(space, n_shards=8)
@@ -55,8 +56,8 @@ def test_guard_never_regresses_objective(lubm3):
     ctrl.initial_partition(base)
 
     def measure(cand):
-        sh = engine.ShardedStore(lubm3.store, space, cand)
-        return engine.workload_average_time(list(ctrl.workload.values()), sh)
+        sh = ShardedStore(lubm3.store, space, cand)
+        return qexec.workload_average_time(list(ctrl.workload.values()), sh)
 
     _, rep = ctrl.adapt(lubm3.workload([f"EQ{i}" for i in range(1, 11)]),
                         measure=measure)

@@ -1,0 +1,220 @@
+"""Executor backends: numpy/jax equivalence on random BGPs and layouts
+(property-based), the cartesian row cap, unified bytes-shipped accounting,
+and the deprecated ``engine`` shims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+from repro.api import KGService
+from repro.core.features import FeatureSpace
+from repro.core.migration import TRIPLE_BYTES
+from repro.core.partition import hash_partition
+from repro.graph.triples import Dictionary, build_store
+from repro.query import engine
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+from repro.query.pattern import Query, is_var, var
+
+
+
+def _assert_equivalent(res_a, res_b, label=""):
+    (ba, sa), (bb, sb) = res_a, res_b
+    assert canon_bindings(ba) == canon_bindings(bb), label
+    for f in qexec.ExecStats.COMPARABLE:
+        assert getattr(sa, f) == getattr(sb, f), (label, f)
+
+
+def _random_dataset(rng, n_triples=400, n_pred=6, n_ent=40):
+    d = Dictionary()
+    for i in range(max(n_ent, n_pred)):
+        d.encode(f"t{i}")
+    t = np.stack([rng.integers(0, n_ent, n_triples),
+                  rng.integers(0, n_pred, n_triples),
+                  rng.integers(0, n_ent, n_triples)], axis=1).astype(np.int32)
+    store = build_store(t, d)
+    return store, FeatureSpace(store)
+
+
+def _random_query(rng, store, name="R"):
+    """Random BGP: chains/stars with shared vars, constant objects, repeated
+    intra-pattern variables, occasional disconnected (cartesian) patterns and
+    unbound predicates."""
+    n_pat = int(rng.integers(1, 5))
+    pats, pool, next_var = [], [], 0
+    for _ in range(n_pat):
+        row = store.triples[rng.integers(store.n_triples)]
+        p = int(row[1]) if rng.random() > 0.1 else var(98)
+        if pool and rng.random() < 0.7:
+            s = pool[rng.integers(len(pool))]
+        else:
+            s, next_var = var(next_var), next_var + 1
+        u = rng.random()
+        if u < 0.45:
+            o = int(row[2])
+        elif u < 0.6 and pool:
+            o = pool[rng.integers(len(pool))]
+        elif u < 0.7:
+            o = s                                 # (?x, p, ?x)
+        else:
+            o, next_var = var(next_var), next_var + 1
+        pool += [x for x in (s, o) if is_var(x) and x not in pool]
+        pats.append((s, p, o))
+    return Query(name=name, patterns=tuple(pats))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**20))
+def test_numpy_jax_equivalent_on_random_bgps(seed):
+    """Property: for random stores, BGPs and layouts, NumpyExecutor and
+    JaxExecutor produce identical bindings and ExecStats."""
+    rng = np.random.default_rng(seed)
+    store, space = _random_dataset(rng)
+    state = hash_partition(space.feature_sizes(),
+                           int(rng.integers(1, 7)), seed=seed % 17)
+    sharded = engine.ShardedStore(store, space, state)
+    for i in range(3):
+        q = _random_query(rng, store, name=f"R{i}")
+        plan = qplan.plan(q, sharded)
+        ref = qexec.NumpyExecutor().run(plan, sharded)
+        # probe_kernel=True pins the jax pack/search kernels' bit-equality;
+        # the default (auto) dispatch must agree too
+        for jx in (qexec.JaxExecutor(probe_kernel=True),
+                   qexec.JaxExecutor()):
+            _assert_equivalent(ref, jx.run(plan, sharded), (seed, q.patterns))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**20))
+def test_jax_batch_equals_per_query_runs(seed):
+    """run_batch over a window == independent run() per plan."""
+    rng = np.random.default_rng(seed)
+    store, space = _random_dataset(rng)
+    state = hash_partition(space.feature_sizes(), 4, seed=1)
+    sharded = engine.ShardedStore(store, space, state)
+    plans = [qplan.plan(_random_query(rng, store, name=f"R{i}"), sharded)
+             for i in range(5)]
+    ex = qexec.JaxExecutor()
+    batch = ex.run_batch(plans, sharded)
+    for plan, got in zip(plans, batch):
+        _assert_equivalent(got, ex.run(plan, sharded), plan.query.name)
+
+
+def _cartesian_fixture():
+    rng = np.random.default_rng(7)
+    store, space = _random_dataset(rng, n_triples=600)
+    p0 = int(store.triples[0, 1])
+    # two fully disconnected unbound-object patterns: |m0| x |m1| rows
+    q = Query(name="X", patterns=((var(0), p0, var(1)),
+                                  (var(2), p0, var(3))))
+    state = hash_partition(space.feature_sizes(), 3, seed=0)
+    return q, engine.ShardedStore(store, space, state)
+
+
+@pytest.mark.parametrize("make", [qexec.NumpyExecutor, qexec.JaxExecutor])
+def test_cartesian_cap_enforced(make):
+    """The cross-product branch enforces a real row cap (clear error) and
+    surfaces materialized cartesian rows in ExecStats."""
+    q, sharded = _cartesian_fixture()
+    plan = qplan.plan(q, sharded)
+    assert plan.ops[1].cartesian
+    n = plan.ops[0].est_rows * plan.ops[1].est_rows
+
+    _, stats = make().run(plan, sharded)          # under the default cap
+    assert stats.cartesian_rows == n > 0
+    assert stats.rows == n
+
+    with pytest.raises(qexec.JoinCapExceeded, match="cap"):
+        make(max_join_rows=n - 1).run(plan, sharded)
+
+
+@pytest.mark.parametrize("make", [qexec.NumpyExecutor,
+                                  lambda: qexec.JaxExecutor(probe_kernel=True),
+                                  qexec.JaxExecutor])
+def test_three_shared_vars_join_is_exact(make):
+    """Regression: a base-2^31 pack of 3 shared vars wraps int64 and
+    hash-equates rows whose leading key differs by 4 — the dense-rank
+    reduction must keep the join exact."""
+    d = Dictionary()
+    for i in range(7):
+        d.encode(f"t{i}")
+    # (a,b,c) from p1=(0,1,2); p2=(?c,?b,?a) row (6,1,0) binds (a=0,b=1,c=6):
+    # naive packed keys collide (diff = 4 * 2^62 == 0 mod 2^64), yet c != c'
+    store = build_store(np.array([[0, 1, 2], [6, 1, 0]], np.int32), d)
+    space = FeatureSpace(store)
+    a, b, c = var(0), var(1), var(2)
+    q = Query(name="tri", patterns=((a, b, c), (c, b, a)))
+    sharded = engine.ShardedStore(store, space,
+                                  hash_partition(space.feature_sizes(), 1, 0))
+    bindings, stats = make().run(qplan.plan(q, sharded), sharded)
+    assert stats.rows == 0
+    assert canon_bindings(bindings) == []
+
+
+def test_profile_honors_configured_join_cap(small_lubm):
+    """The executor's max_join_rows threads through KGService into the
+    facade's profiling, so adaptation never rejects a workload the serving
+    executor was configured to allow."""
+    q, sharded = _cartesian_fixture()
+    plan = qplan.plan(q, sharded)
+    n = plan.ops[0].est_rows * plan.ops[1].est_rows
+    with pytest.raises(qexec.JoinCapExceeded):
+        qexec.profile_from_plan(plan, sharded.store, max_join_rows=n - 1)
+    prof = qexec.profile_from_plan(plan, sharded.store, max_join_rows=n)
+    assert prof.cartesian_rows == n
+
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 executor=qexec.NumpyExecutor(
+                                     max_join_rows=123_456_789))
+    kg = svc.bootstrap(small_lubm.base_workload())
+    assert kg.max_join_rows == 123_456_789
+
+
+def test_bytes_shipped_uses_triple_bytes_constant(small_lubm, space):
+    """Executed and profiled stats charge shipping with the same constant:
+    bytes_shipped == rows_shipped * TRIPLE_BYTES on every path."""
+    space.track_workload(small_lubm.base_workload())
+    state = hash_partition(space.feature_sizes(), 8, seed=0)
+    sharded = engine.ShardedStore(small_lubm.store, space, state)
+    for qname in ("Q2", "Q9", "EQ4"):
+        q = small_lubm.queries[qname]
+        plan = qplan.plan(q, sharded)
+        for ex in (qexec.NumpyExecutor(), qexec.JaxExecutor()):
+            _, stats = ex.run(plan, sharded)
+            assert stats.bytes_shipped == stats.rows_shipped * TRIPLE_BYTES
+        prof = qexec.profile_from_plan(plan, small_lubm.store)
+        est = qplan.stats_from_profile(q, prof, space, state,
+                                       sharded.triple_shard)
+        assert est.bytes_shipped == est.rows_shipped * TRIPLE_BYTES
+        assert est.bytes_shipped == stats.bytes_shipped
+
+
+def test_deprecated_engine_shims_still_work(small_lubm, space):
+    """The retired free functions warn but delegate to the new surface."""
+    space.track_workload(small_lubm.base_workload())
+    state = hash_partition(space.feature_sizes(), 4, seed=0)
+    sharded = engine.ShardedStore(small_lubm.store, space, state)
+    q = small_lubm.queries["Q6"]
+
+    with pytest.warns(DeprecationWarning):
+        bindings, stats = engine.execute(q, sharded)
+    ref_b, ref_s = qexec.NumpyExecutor().run(qplan.plan(q, sharded), sharded)
+    assert canon_bindings(bindings) == canon_bindings(ref_b)
+    assert stats.rows == ref_s.rows
+
+    with pytest.warns(DeprecationWarning):
+        times, _ = engine.run_workload([q], sharded)
+    assert times[q.name] == pytest.approx(stats.modeled_time())
+
+    with pytest.warns(DeprecationWarning):
+        avg = engine.workload_average_time([q], sharded)
+    assert avg == pytest.approx(times[q.name])
+
+    with pytest.warns(DeprecationWarning):
+        prof = engine.profile_query(q, small_lubm.store)
+    with pytest.warns(DeprecationWarning):
+        est = engine.stats_from_profile(q, prof, space, state,
+                                        sharded.triple_shard)
+    assert est.rows == stats.rows
+    assert est.bytes_shipped == stats.bytes_shipped

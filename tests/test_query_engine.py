@@ -1,20 +1,23 @@
-"""Distributed query engine: correctness vs single-shard oracle + invariance
-of results under repartitioning (the system's core correctness property)."""
+"""Planner + executors: correctness vs single-shard oracle, plan-IR sanity,
+and invariance of results under repartitioning (the system's core
+correctness property)."""
 import numpy as np
 import pytest
 
+from conftest import canon_bindings
 from repro.core.adaptive import AWAPartController
 from repro.core.features import FeatureSpace
 from repro.core.partition import hash_partition
-from repro.query import engine, rewrite
+from repro.query import rewrite
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+from repro.query.engine import ShardedStore
+from repro.query.pattern import is_var
 
 
-def _canon(bindings):
-    if not bindings:
-        return []
-    keys = sorted(bindings)
-    return sorted(map(tuple, np.stack([bindings[k] for k in keys],
-                                      axis=1).tolist()))
+
+def _run(q, sharded):
+    return qexec.NumpyExecutor().run(qplan.plan(q, sharded), sharded)
 
 
 @pytest.fixture()
@@ -22,7 +25,7 @@ def sharded8(small_lubm, space):
     space.track_workload(small_lubm.base_workload())
     sizes = space.feature_sizes()
     state = hash_partition(sizes, 8, seed=0)
-    return engine.ShardedStore(small_lubm.store, space, state)
+    return ShardedStore(small_lubm.store, space, state)
 
 
 @pytest.fixture()
@@ -30,7 +33,7 @@ def single(small_lubm, space):
     space.track_workload(small_lubm.base_workload())
     sizes = space.feature_sizes()
     state = hash_partition(sizes, 1, seed=0)
-    return engine.ShardedStore(small_lubm.store, space, state)
+    return ShardedStore(small_lubm.store, space, state)
 
 
 @pytest.mark.parametrize("qname", [f"Q{i}" for i in range(1, 15)]
@@ -38,17 +41,44 @@ def single(small_lubm, space):
 def test_all_queries_match_single_shard_oracle(small_lubm, sharded8, single,
                                                qname):
     q = small_lubm.queries[qname]
-    r8, s8 = engine.execute(q, sharded8)
-    r1, s1 = engine.execute(q, single)
-    assert _canon(r8) == _canon(r1)
+    r8, s8 = _run(q, sharded8)
+    r1, s1 = _run(q, single)
+    assert canon_bindings(r8) == canon_bindings(r1)
     assert s1.distributed_joins == 0          # single shard: no federation
+
+
+def test_plan_ir_well_formed(small_lubm, sharded8):
+    """Plan invariants: one op per pattern, counts match the store, the
+    greedy order starts at the most selective pattern and stays connected."""
+    for qname in ("Q2", "Q9", "EQ4"):
+        q = small_lubm.queries[qname]
+        p = qplan.plan(q, sharded8)
+        assert len(p.ops) == len(q.patterns)
+        assert sorted(op.pattern for op in p.ops) == sorted(q.patterns)
+        assert 0 <= p.ppn < sharded8.n_shards
+        for op in p.ops:
+            s_, p_, o_ = op.pattern
+            assert op.est_rows == small_lubm.store.count(
+                None if is_var(s_) else s_, None if is_var(p_) else p_,
+                None if is_var(o_) else o_)
+            assert op.selectivity == pytest.approx(
+                op.est_rows / small_lubm.store.n_triples)
+        # first op is the globally most selective pattern
+        assert p.ops[0].est_rows == min(op.est_rows for op in p.ops)
+        # every later op either joins on an already-bound var or is flagged
+        bound = set(p.ops[0].new_vars)
+        for op in p.ops[1:]:
+            assert bool(op.join_vars) != op.cartesian
+            assert set(op.join_vars) <= bound
+            bound |= set(op.new_vars)
+        assert q.name in p.explain()
 
 
 def test_q6_counts_students(small_lubm, single):
     d = small_lubm.dictionary
     n = small_lubm.store.count(None, d.lookup("rdf:type"),
                                d.lookup("ub:Student"))
-    r, _ = engine.execute(small_lubm.queries["Q6"], single)
+    r, _ = _run(small_lubm.queries["Q6"], single)
     assert len(next(iter(r.values()))) == n
 
 
@@ -60,15 +90,15 @@ def test_results_invariant_under_adaptation(small_lubm):
     base = small_lubm.base_workload()
     space.track_workload(base)
     state0 = ctrl.initial_partition(base)
-    sh0 = engine.ShardedStore(small_lubm.store, space, state0)
-    results0 = {q.name: _canon(engine.execute(q, sh0)[0])
+    sh0 = ShardedStore(small_lubm.store, space, state0)
+    results0 = {q.name: canon_bindings(_run(q, sh0)[0])
                 for q in small_lubm.extended_workload()}
 
     state1, report = ctrl.adapt(
         small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
-    sh1 = engine.ShardedStore(small_lubm.store, space, state1)
+    sh1 = ShardedStore(small_lubm.store, space, state1)
     for q in small_lubm.extended_workload():
-        assert _canon(engine.execute(q, sh1)[0]) == results0[q.name], q.name
+        assert canon_bindings(_run(q, sh1)[0]) == results0[q.name], q.name
     # shards still hold every triple exactly once
     assert sum(sh1.shard_sizes()) == small_lubm.store.n_triples
 
@@ -80,6 +110,10 @@ def test_federated_rewrite_mentions_service(small_lubm, space, sharded8):
     assert "SELECT" in txt and "WHERE" in txt
     counts = rewrite.service_counts(q, space, sharded8.state)
     assert counts["local"] + counts["service"] == len(q.patterns)
+    # the plan's federation annotations agree with the rewriter
+    p = qplan.plan(q, sharded8)
+    assert p.ppn == counts["ppn"]
+    assert sum(op.service for op in p.ops) == counts["service"]
 
 
 def test_adaptation_reduces_distributed_joins(lubm3):
