@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--queries-per-batch", type=int, default=24)
     ap.add_argument("--executor", default="jax", choices=["numpy", "jax"])
+    ap.add_argument("--migration-budget", type=int, default=None,
+                    help="bytes of migration traffic applied per batch "
+                         "(default: atomic commit inside the adapt round)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -35,7 +38,8 @@ def main() -> None:
     svc = KGService.from_dataset(
         ds, args.shards,
         AWAPartitioner(AdaptConfig(adapt_threshold=1.10)),
-        executor=args.executor)
+        executor=args.executor,
+        migration_budget=args.migration_budget)
     base = ds.base_workload()
     svc.bootstrap(base)
     print(f"[{time.time()-t0:5.1f}s] serving {ds.store.n_triples} triples on "
@@ -59,7 +63,11 @@ def main() -> None:
         avg_ms = svc.avg_execution_time() * 1e3
 
         marker = ""
-        if batch_i >= 1:
+        if svc.session is not None:     # chunked drain in flight: one chunk
+            sess = svc.session          # was applied ahead of this batch
+            marker = (f"  .. migrating {sess.applied}/{sess.n_chunks} chunks"
+                      f" ({sess.bytes_applied / 1e6:.2f} MB)")
+        elif batch_i >= 1:
             report = svc.maybe_adapt()
             if report is not None and report.accepted:
                 adaptations += 1

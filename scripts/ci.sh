@@ -31,6 +31,44 @@ for name in ("numpy", "jax"):
 assert rows["numpy"] == rows["jax"], "executor backends disagree"
 EOF
 
+echo "== smoke: throttled migration drain on LUBM(1) =="
+python - <<'EOF'
+import numpy as np
+from repro.api import KGService
+from repro.graph import lubm
+
+def canon(b):
+    return sorted(map(tuple, np.stack(
+        [b[k] for k in sorted(b)], axis=1).tolist())) if b else []
+
+ds = lubm.load(1, seed=0)
+svc = KGService.from_dataset(ds, n_shards=4, migration_budget=120_000)
+svc.bootstrap(ds.base_workload())
+window = ds.extended_workload()
+# bindings are layout-invariant: the pre-adapt results are the reference
+ref = {q.name: canon(b)
+       for q, (b, _) in zip(window, svc.query_batch(window))}
+report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+assert report.accepted, "cost-aware guard rejected the smoke round"
+sess = svc.session
+assert sess is not None and sess.n_chunks >= 3, \
+    f"expected a >=3-step drain, got {sess and sess.n_chunks}"
+steps = 0
+while svc.session is not None:                # query between every chunk
+    for q, (b, _) in zip(window, svc.query_batch(window)):
+        assert canon(b) == ref[q.name], (q.name, svc.kg.epoch)
+    steps += 1
+assert steps >= 3, steps
+assert np.array_equal(svc.kg.state.feature_to_shard,
+                      sess.target.feature_to_shard)
+print(f"[ci] throttled migration: {sess.n_chunks} chunks drained over "
+      f"{steps} serving windows, {sess.bytes_applied} B, "
+      f"final epoch {svc.kg.epoch}")
+EOF
+
+echo "== smoke: benchmarks/bench_migration.py --dry-run =="
+python benchmarks/bench_migration.py --dry-run
+
 echo "== deprecation: no in-repo caller of the shimmed engine entry points =="
 # the shims live in src/repro/query/engine.py and are exercised (with
 # pytest.warns) only by tests/test_executors.py

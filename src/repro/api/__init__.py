@@ -7,7 +7,10 @@ Everything callers need to serve a partitioned knowledge graph:
 * :class:`PartitionedKG` — shard-view facade with incremental delta updates
   and the per-``(query, store)`` plan cache;
 * :class:`KGService` — the Fig.-6 session loop (``bootstrap / query /
-  query_batch / observe / maybe_adapt / reset_baseline``);
+  query_batch / observe / maybe_adapt / step / drain / reset_baseline``);
+* :class:`MigrationSession` — chunked online application of an accepted
+  migration (``repro.migrate``), throttled by the service's
+  ``migration_budget`` knob;
 * executors: :class:`Executor` protocol with :class:`NumpyExecutor`
   (reference) and :class:`JaxExecutor` (batched), re-exported from
   ``repro.query.exec``.
@@ -18,6 +21,7 @@ from repro.api.facade import PartitionedKG
 from repro.api.partitioners import (AWAPartitioner, HashPartitioner,
                                     Partitioner, WawPartitioner)
 from repro.api.service import KGService
+from repro.migrate import MigrationSession
 from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
 
 __all__ = [
@@ -26,6 +30,7 @@ __all__ = [
     "HashPartitioner",
     "JaxExecutor",
     "KGService",
+    "MigrationSession",
     "NumpyExecutor",
     "PartitionedKG",
     "Partitioner",

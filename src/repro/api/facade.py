@@ -53,6 +53,11 @@ class PartitionedKG:
             for s in range(state.n_shards)]
         self._views: List[Optional[TripleStore]] = [None] * state.n_shards
         self.view_rebuilds = 0         # telemetry: shard views (re)built
+        # layout epoch: bumped whenever the served layout actually changes
+        # (a delta that moves features, or universe growth). Cached plans are
+        # valid for exactly one epoch; a mid-migration hybrid layout is a
+        # first-class epoch like any other.
+        self.epoch = 0
         # query plans, cached per (query, store) until the layout changes;
         # keyed by query name (+ patterns, so a re-defined query under the
         # same name is re-planned)
@@ -120,6 +125,7 @@ class PartitionedKG:
             return
         self.state, self.owners = migration.extend_for_space(self.state,
                                                              self.space)
+        self.epoch += 1
         self._plans.clear()
         self._rebuild_feature_index()
 
@@ -132,6 +138,9 @@ class PartitionedKG:
             "sync_universe() before applying a delta over a grown universe"
         changed = np.flatnonzero(
             self.state.feature_to_shard != new_state.feature_to_shard)
+        if len(changed) == 0:              # no-op delta: the served layout is
+            self.state = new_state         # unchanged — keep plans/views/epoch
+            return
         rows = self._rows_of(changed)
         old_shards = self._triple_shard[rows]
         new_shards = new_state.feature_to_shard[self.owners[rows]] \
@@ -143,7 +152,19 @@ class PartitionedKG:
             self._rows[s] = np.flatnonzero(self._triple_shard == s)
             self._views[s] = None          # re-indexed lazily on next access
         self.state = new_state
+        self.epoch += 1
         self._plans.clear()                # PPN/federation annotations changed
+
+    def apply_chunk(self, chunk: migration.MigrationChunk) -> None:
+        """Apply one ``MigrationChunk`` of an in-flight migration as an
+        incremental delta. The resulting partially-migrated layout is served
+        as-is (a new epoch): only shards touched by the chunk's moves are
+        re-indexed, and cached plans are invalidated because the PPN vote and
+        federation annotations may have shifted."""
+        state = self.state.copy()
+        for f, _src, dst in chunk.moves:
+            state.feature_to_shard[f] = dst
+        self._apply(state)
 
     # ------------------------------------------------------------------ #
     # plans, profiles, candidate pricing
@@ -204,4 +225,5 @@ class PartitionedKG:
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"PartitionedKG(n_triples={self.store.n_triples}, "
                 f"n_shards={self.n_shards}, "
-                f"n_features={len(self.state.feature_to_shard)})")
+                f"n_features={len(self.state.feature_to_shard)}, "
+                f"epoch={self.epoch})")

@@ -15,10 +15,13 @@ from __future__ import annotations
 
 from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
 
+from repro.core import migration
 from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
 from repro.core.features import FeatureSpace
 from repro.core.partition import (PartitionState, balanced_partition,
                                   hash_partition)
+from repro.migrate import MigrationSession
+from repro.query import exec as qexec
 from repro.query.pattern import Query
 
 from repro.api.facade import PartitionedKG
@@ -91,20 +94,38 @@ class AWAPartitioner(WawPartitioner):
         return state
 
     def adapt(self, kg: PartitionedKG, new_queries: Sequence[Query] = (),
-              net=None, measure=None) -> Tuple[PartitionState, AdaptReport]:
-        """One adaptation round against the live facade.
+              net=None, measure=None, bytes_budget: Optional[int] = None,
+              ) -> Tuple[MigrationSession, AdaptReport]:
+        """One adaptation round against the live facade — returns a
+        :class:`MigrationSession` instead of mutating the served layout.
 
         Each candidate cut is priced via the facade's cached query profiles
         (no joins re-executed, no views touched); the controller's
-        accept/revert guard then commits the winner (or nothing) as an
-        incremental delta. ``measure`` overrides the objective (``None`` =
-        modeled workload-average time from the profiles)."""
+        migration-cost-aware guard then accepts the winner only if the
+        modeled savings amortize the plan's traffic over the expected TM
+        window. Nothing is committed here: the accepted plan comes back as a
+        session whose chunks (hottest workload features first, each at most
+        ``bytes_budget`` of traffic; ``None`` = one chunk) the caller drains
+        while serving. A rejected round returns an already-drained noop
+        session. ``measure`` overrides the objective (``None`` = modeled
+        workload-average time from the profiles)."""
         assert self.controller is not None, "partition() first"
         ctrl = self.controller
+        net_model = net or qexec.NetworkModel()
         if measure is None:
             def measure(cand: PartitionState) -> float:
                 return kg.measure_candidate(
                     cand, list(ctrl.workload.values()), net)
-        state, report = ctrl.adapt(list(new_queries), measure=measure)
-        kg.commit(state)
-        return state, report
+        state, report = ctrl.adapt(list(new_queries), measure=measure,
+                                   net=net_model)
+        kg.sync_universe()     # align the served universe with the round's
+        if not (report.accepted and report.plan.n_moves):
+            return MigrationSession.noop(kg), report
+        heat = migration.feature_heat(ctrl.space,
+                                      list(ctrl.workload.values()))
+        # the session's delta is derived from the *live* facade state (which
+        # may be a mid-drain hybrid), so draining always lands exactly on the
+        # accepted target — report.plan stays the guard's priced plan
+        session = MigrationSession(kg, state, bytes_budget=bytes_budget,
+                                   priority=heat, net=net_model)
+        return session, report

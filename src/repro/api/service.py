@@ -7,11 +7,14 @@ strategies — trigger/apply the Fig.-5 adaptation. Drivers, examples,
 benchmarks, and tests orchestrate through this facade only; controller
 internals are never reached into.
 
-    svc = KGService.from_dataset(ds, n_shards=8, executor="jax")
+    svc = KGService.from_dataset(ds, n_shards=8, executor="jax",
+                                 migration_budget=1 << 20)   # 1 MB per step
     kg = svc.bootstrap(ds.base_workload())
     bindings, stats = svc.query(ds.queries["Q9"])
     results = svc.query_batch(window)        # one dispatched batch per window
-    report = svc.maybe_adapt(new_queries)
+    report = svc.maybe_adapt(new_queries)    # accepted plan -> svc.session
+    svc.step()                               # apply one migration chunk
+    svc.drain()                              # or finish the whole drain
 
 Every query is planned once per ``(query, store)`` (the ``PartitionedKG``
 plan cache) and executed by the configured backend: ``executor="numpy"``
@@ -26,7 +29,9 @@ import numpy as np
 
 from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
 from repro.core.features import FeatureSpace
+from repro.core.migration import MigrationChunk
 from repro.graph.triples import TripleStore
+from repro.migrate import MigrationSession
 from repro.query import exec as qexec
 from repro.query.pattern import Query
 
@@ -35,21 +40,32 @@ from repro.api.partitioners import AWAPartitioner, Partitioner
 
 
 class KGService:
-    """Session facade over store + feature space + partitioner + shard views."""
+    """Session facade over store + feature space + partitioner + shard views.
+
+    ``migration_budget`` (bytes) throttles how an accepted adaptation is
+    applied: ``None`` (default) drains the whole ``MigrationPlan`` inside
+    ``adapt()`` — the old atomic commit — while a byte budget turns the
+    round into a pending :class:`MigrationSession` whose chunks are applied
+    one per ``query_batch`` window (or explicitly via ``step()``/``drain()``),
+    so adaptation becomes a background process with bounded per-window cost
+    instead of a latency cliff."""
 
     def __init__(self, store: TripleStore, n_shards: int,
                  partitioner: Partitioner | None = None, *,
                  type_predicate: int | None = None,
                  config: AdaptConfig | None = None,
                  executor: "str | qexec.Executor | None" = None,
-                 net: qexec.NetworkModel | None = None):
+                 net: qexec.NetworkModel | None = None,
+                 migration_budget: int | None = None):
         self.store = store
         self.n_shards = n_shards
         self.partitioner = partitioner or AWAPartitioner(config)
         self.space = FeatureSpace(store, type_predicate=type_predicate)
         self.executor = qexec.get_executor(executor)
         self.net = net
+        self.migration_budget = migration_budget
         self.kg: Optional[PartitionedKG] = None
+        self.session: Optional[MigrationSession] = None   # in-flight drain
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
 
     @classmethod
@@ -92,8 +108,14 @@ class KGService:
     def query_batch(self, queries: Sequence[Query],
                     ) -> List[Tuple[Dict[int, np.ndarray], qexec.ExecStats]]:
         """Execute a whole window of queries as one backend batch (a single
-        dispatched batch on the jax executor) and record every runtime."""
+        dispatched batch on the jax executor) and record every runtime.
+
+        When a throttled migration is in flight, one chunk is applied ahead
+        of the window — the window pays a bounded migration stall (at most
+        ``migration_budget`` bytes of traffic) and then serves the updated
+        hybrid layout, so the hottest features arrive earliest."""
         assert self.kg is not None, "bootstrap() first"
+        self.step()
         plans = [self.kg.plan(q) for q in queries]
         results = self.executor.run_batch(plans, self.kg)
         for q, (_, stats) in zip(queries, results):
@@ -135,30 +157,69 @@ class KGService:
 
     def adapt(self, new_queries: Sequence[Query] = ()) -> AdaptReport:
         """Run one adaptation round now (strategy must be adaptive). On
-        acceptance the TM window restarts with the measured new baseline."""
+        acceptance the TM window restarts with the measured new baseline.
+
+        Any still-draining previous migration is finished first. With
+        ``migration_budget=None`` the accepted plan is drained atomically
+        before returning (the classic stop-the-world commit); with a budget
+        it is left pending as ``self.session`` and applied chunk-by-chunk by
+        subsequent ``query_batch`` windows / ``step()`` calls."""
         assert self.kg is not None, "bootstrap() first"
         if not hasattr(self.partitioner, "adapt"):
             raise TypeError(f"partitioner '{self.partitioner.name}' is not "
                             "adaptive; use AWAPartitioner")
-        _, report = self.partitioner.adapt(self.kg, list(new_queries),
-                                           net=self.net)
+        self.drain()                           # finish any in-flight drain
+        session, report = self.partitioner.adapt(
+            self.kg, list(new_queries), net=self.net,
+            bytes_budget=self.migration_budget)
         ctrl = self.controller
         if report.accepted and ctrl is not None:
             ctrl.exec_times.clear()            # fresh TM window post-migration
             ctrl.reset_baseline(report.t_new)
+        if self.migration_budget is None:
+            session.drain()                    # atomic: commit-now behaviour
+        self.session = None if session.done else session
         return report
+
+    def step(self) -> Optional[MigrationChunk]:
+        """Apply one chunk of the pending migration session (if any).
+        Returns the applied ``MigrationChunk`` or ``None`` when idle."""
+        if self.session is None:
+            return None
+        chunk = self.session.step()
+        if self.session.done:
+            self.session = None
+            # the TM observed hybrid-layout times while draining; restart the
+            # window so the pinned t_new baseline is compared against the
+            # fully-migrated layout only (no spurious post-drain round)
+            ctrl = self.controller
+            if ctrl is not None:
+                ctrl.exec_times.clear()
+            self._times.clear()
+        return chunk
+
+    def drain(self) -> int:
+        """Finish the pending migration session; returns chunks applied."""
+        n = 0
+        while self.step() is not None:
+            n += 1
+        return n
 
     def maybe_adapt(self, new_queries: Sequence[Query] = (),
                     ) -> Optional[AdaptReport]:
         """Adapt only if the monitored average degraded past the threshold
-        (or no baseline exists yet). Returns None when no round was run."""
+        (or no baseline exists yet and at least one query was observed).
+        Returns None when no round was run."""
         if not self.should_adapt():
             return None
         return self.adapt(new_queries)
 
     def reset_baseline(self, value: Optional[float] = None) -> None:
         """Public baseline control: clear (None) to force the next
-        ``maybe_adapt`` to run a round, or pin to a measured average."""
+        ``maybe_adapt`` to run a round, or pin to a measured average. Resets
+        the whole TM window — the non-adaptive ``_times`` log included, so
+        ``avg_execution_time()`` restarts consistently across strategies."""
         ctrl = self.controller
         if ctrl is not None:
             ctrl.reset_baseline(value)
+        self._times.clear()

@@ -45,6 +45,11 @@ class AdaptConfig:
     balance_tolerance: float = 1.15
     weights: ScoreWeights = dataclasses.field(default_factory=ScoreWeights)
     adapt_threshold: float = 1.25    # adapt when avg time degrades by 25%
+    # migration-cost-aware accept guard: expected number of query executions
+    # in the next TM window, over which the per-query savings must amortize
+    # the migration traffic. None = estimate from the TM (observed execution
+    # count, floored at the workload's total frequency).
+    amortize_window: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -57,6 +62,8 @@ class AdaptReport:
     t_new: Optional[float] = None
     n_clusters: int = 0
     chosen_cut: float = 0.0
+    migration_s: float = 0.0         # modeled traffic time of the plan
+    amortize_window: int = 0         # TM window the guard amortized over
 
 
 class AWAPartController:
@@ -85,8 +92,11 @@ class AWAPartController:
         return float(np.mean(per_q)) if per_q else 0.0
 
     def should_adapt(self) -> bool:
+        # no baseline yet: adapt on the first *observed* degradation signal —
+        # an empty TM (fresh session, zero queries served) must not trigger a
+        # pointless round
         if self._baseline_avg is None:
-            return True
+            return any(self.exec_times.values())
         cur = self.avg_execution_time()
         return cur > self.config.adapt_threshold * self._baseline_avg
 
@@ -202,13 +212,32 @@ class AWAPartController:
         self.state = state
         return state
 
+    def _expected_window(self, queries: Sequence[Query]) -> int:
+        """Expected query executions in the next TM window — what the
+        migration-cost guard amortizes the plan's traffic over. Configured
+        (``amortize_window``) or estimated: the observed TM execution count,
+        floored at the workload's total frequency (every workload query runs
+        at least once per window)."""
+        if self.config.amortize_window is not None:
+            return int(self.config.amortize_window)
+        observed = sum(len(v) for v in self.exec_times.values())
+        expected = sum(q.frequency for q in queries)
+        return int(max(observed, expected))
+
     def adapt(self, new_queries: Sequence[Query],
               measure: Optional[Callable[[PartitionState], float]] = None,
-              ) -> Tuple[PartitionState, AdaptReport]:
+              net=None) -> Tuple[PartitionState, AdaptReport]:
         """One Fig.-5 adaptation round. ``measure`` returns the average
         workload execution time under a candidate partition (used for the
         accept/revert guard); if None, the frequency-weighted distributed
-        join count is the guard objective."""
+        join count is the guard objective.
+
+        The line-24 guard is migration-cost-aware when ``net`` (a
+        ``NetworkModel``-like object) is given alongside ``measure``: the
+        destination layout is accepted only if the modeled per-query savings,
+        amortized over the expected TM window (``_expected_window``), pay for
+        shipping ``plan.bytes`` of migration traffic — pricing the *journey*,
+        not just the destination."""
         assert self.state is not None, "call initial_partition first"
         cfg = self.config
         for q in new_queries:                        # line 1
@@ -238,8 +267,20 @@ class AWAPartController:
         mplan = migration.plan(cur, new)
 
         t_new = obj_new if measure else None                 # line 24
+        migration_s = 0.0
+        window = 0
         if measure:
-            accepted = t_new < t_base                        # lines 25-27
+            gain = t_base - t_new
+            if net is not None and mplan.n_moves:
+                # migration-cost-aware guard: the destination must amortize
+                # the cost of getting there over the expected TM window
+                migration_s = migration.migration_seconds(mplan, net)
+                window = self._expected_window(queries)
+                # window == 0 means nothing to amortize over: savings can
+                # never pay for a positive migration cost, so reject
+                accepted = gain > 0 and gain * window >= migration_s
+            else:
+                accepted = t_new < t_base                    # lines 25-27
         else:
             accepted = dj_after < dj_before
         if accepted:
@@ -250,4 +291,5 @@ class AWAPartController:
         return self.state, AdaptReport(
             accepted=accepted, plan=mplan, dj_before=dj_before,
             dj_after=dj_after, t_base=t_base, t_new=t_new,
-            n_clusters=n_clusters, chosen_cut=chosen_cut)
+            n_clusters=n_clusters, chosen_cut=chosen_cut,
+            migration_s=migration_s, amortize_window=window)

@@ -3,11 +3,19 @@
 Only triples of *re-assigned* features move — the incremental adjustment that
 distinguishes AWAPart from full re-partitioning. A plan lists
 (feature, src, dst) moves plus the migration traffic they imply.
+
+A plan can additionally be *chunked* (``chunk_plan``) into prioritized
+``MigrationChunk``s — hottest workload features first, each chunk bounded by
+a per-step bytes budget — so an online ``repro.migrate.MigrationSession`` can
+apply it incrementally while queries keep being served, instead of one
+stop-the-world commit. ``migration_seconds`` prices the traffic of a plan or
+chunk under the same network model the executors use, which is what the
+controller's migration-cost-aware accept guard amortizes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,6 +37,84 @@ class MigrationPlan:
     def summary(self) -> str:
         return (f"{self.n_moves} feature moves, {self.n_triples} triples, "
                 f"{self.bytes / 1e6:.2f} MB migration traffic")
+
+
+@dataclasses.dataclass
+class MigrationChunk:
+    """One bounded step of a chunked migration: a contiguous slice of a
+    plan's moves whose total traffic fits the per-step bytes budget."""
+    moves: List[Tuple[int, int, int]]        # (feature, src_shard, dst_shard)
+    n_triples: int
+    bytes: int
+
+    @property
+    def n_moves(self) -> int:
+        return len(self.moves)
+
+    def summary(self) -> str:
+        return (f"chunk: {self.n_moves} moves, {self.n_triples} triples, "
+                f"{self.bytes / 1e3:.1f} KB")
+
+
+def migration_seconds(plan_or_chunk, net) -> float:
+    """Modeled wall time to ship a plan/chunk's triples between shards: one
+    transfer-setup latency per distinct (src, dst) shard pair plus wire time
+    for the payload. ``net`` is any object with ``latency_s`` /
+    ``bandwidth_Bps`` (e.g. ``repro.query.exec.NetworkModel``)."""
+    pairs = len({(src, dst) for _, src, dst in plan_or_chunk.moves})
+    return pairs * net.latency_s + plan_or_chunk.bytes / net.bandwidth_Bps
+
+
+def feature_heat(space, queries: Sequence) -> np.ndarray:
+    """Frequency-weighted workload touch count per feature — the priority
+    used to order migration chunks (hottest features migrate first, so the
+    layout the workload actually hits converges earliest)."""
+    heat = np.zeros(space.n_features, dtype=np.float64)
+    for q in queries:
+        heat[space.query_features(q)] += q.frequency
+    return heat
+
+
+def chunk_plan(plan: MigrationPlan, feature_sizes: np.ndarray,
+               bytes_budget: int,
+               priority: Optional[np.ndarray] = None) -> List[MigrationChunk]:
+    """Split ``plan`` into ``MigrationChunk``s of at most ``bytes_budget``
+    migration traffic each (a single move larger than the budget gets its own
+    chunk — moves are atomic at feature granularity).
+
+    Moves are ordered hottest-first by ``priority`` (per-feature workload
+    heat; ties broken largest-first, then by feature id for determinism), so
+    early chunks carry the features the workload is actually touching.
+    """
+    if not plan.moves:
+        return []
+    feats = np.array([m[0] for m in plan.moves], dtype=np.int64)
+    sizes = np.asarray(feature_sizes, dtype=np.int64)[feats]
+    prio = (np.zeros(len(feats)) if priority is None
+            else np.asarray(priority, dtype=np.float64)[feats])
+    # lexsort: last key is primary — hottest, then biggest, then feature id
+    order = np.lexsort((feats, -sizes, -prio))
+    budget = max(int(bytes_budget), 1)
+
+    chunks: List[MigrationChunk] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i in order.tolist():
+        b = int(sizes[i]) * TRIPLE_BYTES
+        if cur and cur_bytes + b > budget:
+            chunks.append(_make_chunk(plan, cur, sizes))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += b
+    chunks.append(_make_chunk(plan, cur, sizes))
+    return chunks
+
+
+def _make_chunk(plan: MigrationPlan, idxs: List[int],
+                sizes: np.ndarray) -> MigrationChunk:
+    n = int(sizes[idxs].sum())
+    return MigrationChunk(moves=[plan.moves[i] for i in idxs],
+                          n_triples=n, bytes=n * TRIPLE_BYTES)
 
 
 def plan(old: PartitionState, new: PartitionState) -> MigrationPlan:

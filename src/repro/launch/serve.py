@@ -5,11 +5,13 @@ workload-aware initial partition (WawPart [21]) -> serve federated queries
 over the shards -> monitor per-query runtimes (TM) -> on workload change,
 run the Fig.-5 adaptation as an incremental shard-view delta -> keep
 serving. ``--experiment 1|2`` reproduces the paper's two evaluations,
-``--partitioner hash|wawpart|awapart`` swaps the strategy, and
-``--executor numpy|jax`` swaps the query backend under the same harness.
+``--partitioner hash|wawpart|awapart`` swaps the strategy,
+``--executor numpy|jax`` swaps the query backend under the same harness, and
+``--migration-budget BYTES`` throttles accepted migrations into a chunked
+``MigrationSession`` drained one chunk per serving window (default: atomic).
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
-      --experiment 1 --executor jax
+      --experiment 1 --executor jax --migration-budget 1048576
 """
 from __future__ import annotations
 
@@ -31,13 +33,35 @@ PARTITIONERS = {"hash": HashPartitioner, "wawpart": WawPartitioner,
 
 def build_system(universities: int, shards: int, seed: int = 0,
                  config: AdaptConfig | None = None,
-                 partitioner: str = "awapart", executor: str = "numpy"):
+                 partitioner: str = "awapart", executor: str = "numpy",
+                 migration_budget: int | None = None):
     """Load LUBM and assemble the service facade (no partition yet)."""
     ds = lubm.load(universities, seed)
     part = (HashPartitioner() if partitioner == "hash"
             else PARTITIONERS[partitioner](config))
-    svc = KGService.from_dataset(ds, shards, part, executor=executor)
+    svc = KGService.from_dataset(ds, shards, part, executor=executor,
+                                 migration_budget=migration_budget)
     return ds, svc
+
+
+def drive_migration(svc: KGService, window, verbose=True):
+    """Drain a pending MigrationSession while continuing to serve: each
+    ``query_batch`` window applies exactly one bounded chunk ahead of
+    serving, then executes against the updated hybrid layout. Returns
+    per-window average modeled query times observed during the drain."""
+    averages = []
+    session = svc.session
+    while svc.session is not None:
+        results = svc.query_batch(window)       # serve + one chunk
+        avg = float(np.mean([st.modeled_time(svc.net)
+                             for _, st in results]))
+        averages.append(avg)
+        if verbose:
+            print(f"[migrate] window {len(averages) - 1}: "
+                  f"avg {avg * 1e3:6.1f} ms | epoch {svc.kg.epoch} | "
+                  f"{session.applied}/{session.n_chunks} chunks, "
+                  f"{session.bytes_applied / 1e6:.2f} MB migrated")
+    return averages
 
 
 def experiment1(ds, svc: KGService, verbose=True):
@@ -56,6 +80,12 @@ def experiment1(ds, svc: KGService, verbose=True):
                     state=kg.state, kg=kg)
 
     report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+    if svc.session is not None:        # throttled: drain while serving
+        if verbose:
+            print(f"[exp1] migration session: {svc.session.n_chunks} chunks "
+                  f"of <= {svc.migration_budget} B "
+                  f"({report.plan.summary()})")
+        drive_migration(svc, extended, verbose=verbose)
     t_adapt, s_adapt = svc.run_workload(extended)
     if verbose:
         _print_exp(t_initial, t_adapt, s_initial, s_adapt, report)
@@ -83,6 +113,8 @@ def experiment2(ds, svc: KGService, hot_query: str = "Q1",
                     state=svc.kg.state, kg=svc.kg)
 
     report = svc.adapt(biased)
+    if svc.session is not None:        # throttled: drain while serving
+        drive_migration(svc, biased, verbose=verbose)
     t1 = svc.workload_average_time(biased)
     if verbose:
         print(f"[exp2] biased-workload avg: initial {t0*1e3:.1f} ms -> "
@@ -118,6 +150,9 @@ def main() -> None:
                     choices=sorted(PARTITIONERS))
     ap.add_argument("--executor", default="numpy", choices=["numpy", "jax"],
                     help="query backend (jax = batched execution)")
+    ap.add_argument("--migration-budget", type=int, default=None,
+                    help="bytes of migration traffic per serving window "
+                         "(default: atomic commit)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
@@ -125,7 +160,8 @@ def main() -> None:
     t0 = time.time()
     ds, svc = build_system(args.universities, args.shards,
                            partitioner=args.partitioner,
-                           executor=args.executor)
+                           executor=args.executor,
+                           migration_budget=args.migration_budget)
     print(f"loaded LUBM({args.universities}): {ds.store.n_triples} triples "
           f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
           f"{args.shards} shards, strategy={svc.partitioner.name}, "

@@ -1,0 +1,324 @@
+"""Online migration engine: chunked MigrationSessions, dual-layout serving
+correctness at every intermediate epoch, the migration-cost-aware accept
+guard, and the TM/plan-cache satellites."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+from test_executors import _random_dataset, _random_query
+
+from repro.api import (HashPartitioner, KGService, MigrationSession,
+                       PartitionedKG)
+from repro.core import migration
+from repro.core.adaptive import AdaptConfig, AWAPartController
+from repro.core.partition import hash_partition
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+
+
+# --------------------------------------------------------------------------- #
+# chunking
+# --------------------------------------------------------------------------- #
+
+def _random_plan(rng, n_feat=30, n_shards=5):
+    sizes = rng.integers(0, 400, size=n_feat).astype(np.int64)
+    old = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    new = old.copy()
+    moved = rng.random(n_feat) < 0.5
+    new.feature_to_shard[moved] = rng.integers(0, n_shards, moved.sum())
+    return old, new, migration.plan(old, new), sizes
+
+
+@given(st.integers(0, 2 ** 20), st.integers(1, 5000))
+@settings(max_examples=25, deadline=None)
+def test_chunk_plan_partitions_moves_within_budget(seed, budget):
+    """Chunks cover the plan's moves exactly once, conserve bytes, and each
+    chunk fits the budget unless it is a single oversized move."""
+    rng = np.random.default_rng(seed)
+    _, _, plan, sizes = _random_plan(rng)
+    chunks = migration.chunk_plan(plan, sizes, bytes_budget=budget)
+    assert sorted(m for c in chunks for m in c.moves) == sorted(plan.moves)
+    assert sum(c.bytes for c in chunks) == plan.bytes
+    assert sum(c.n_triples for c in chunks) == plan.n_triples
+    for c in chunks:
+        assert c.bytes <= budget or c.n_moves == 1
+    if not plan.moves:
+        assert chunks == []
+
+
+def test_chunk_plan_orders_hottest_first():
+    sizes = np.array([10, 10, 10, 10], np.int64)
+    old = hash_partition(sizes, 2, seed=0)
+    new = old.copy()
+    new.feature_to_shard[:] = (old.feature_to_shard + 1) % 2   # move all
+    plan = migration.plan(old, new)
+    heat = np.array([0.0, 5.0, 1.0, 9.0])
+    chunks = migration.chunk_plan(plan, sizes, bytes_budget=1,
+                                  priority=heat)
+    order = [c.moves[0][0] for c in chunks]
+    assert order == [3, 1, 2, 0]                               # heat-descending
+
+
+def test_migration_seconds_prices_pairs_and_bytes():
+    net = qexec.NetworkModel(latency_s=0.1, bandwidth_Bps=1000.0)
+    plan = migration.MigrationPlan(
+        moves=[(0, 0, 1), (1, 0, 1), (2, 1, 2)], n_triples=100,
+        bytes=1200)
+    # two distinct (src, dst) pairs + 1200 B on the wire
+    assert migration.migration_seconds(plan, net) == \
+        pytest.approx(2 * 0.1 + 1200 / 1000.0)
+
+
+# --------------------------------------------------------------------------- #
+# session mechanics on the live facade
+# --------------------------------------------------------------------------- #
+
+def _kg_pair(rng, n_shards=4):
+    """A live facade plus an independent fully-committed reference facade."""
+    store, space = _random_dataset(rng)
+    sizes = space.feature_sizes()
+    state = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    target = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    kg = PartitionedKG(store, space, state.copy())
+    ref = PartitionedKG(store, space, target.copy())
+    return kg, ref, target
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_mid_migration_queries_match_committed_layout(seed):
+    """The acceptance property: at EVERY intermediate session epoch, query
+    bindings and ExecStats.rows equal the fully-committed layout's (results
+    are layout-invariant; only federation stats may differ) — under both
+    executors."""
+    rng = np.random.default_rng(seed)
+    kg, ref, target = _kg_pair(rng)
+    queries = [_random_query(rng, kg.store, name=f"R{i}") for i in range(3)]
+    refs = [qexec.NumpyExecutor().run(ref.plan(q), ref) for q in queries]
+
+    budget = max(int(target.feature_sizes.sum()) * migration.TRIPLE_BYTES
+                 // 6, 1)
+    session = MigrationSession(kg, target, bytes_budget=budget)
+    executors = [qexec.NumpyExecutor(), qexec.JaxExecutor()]
+    epochs_seen = []
+    while True:                       # checks the pre-drain epoch too
+        epochs_seen.append(kg.epoch)
+        for q, (rb, rs) in zip(queries, refs):
+            for ex in executors:
+                b, s = ex.run(kg.plan(q), kg)
+                assert canon_bindings(b) == canon_bindings(rb), \
+                    (q.name, ex.name, kg.epoch)
+                assert s.rows == rs.rows
+        if session.step() is None:
+            break
+    assert np.array_equal(kg.state.feature_to_shard,
+                          target.feature_to_shard)
+    # every applied chunk produced a distinct served epoch
+    assert len(set(epochs_seen)) == len(epochs_seen)
+    assert session.epochs[:-1] == epochs_seen[:len(session.epochs) - 1]
+
+
+def test_session_epochs_views_and_plan_cache(small_lubm):
+    """Each chunk bumps the facade epoch, invalidates cached plans, and
+    re-indexes only the shards its moves touch."""
+    svc = KGService.from_dataset(small_lubm, n_shards=8)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    q = small_lubm.queries["Q9"]
+    kg.plan(q)
+
+    target = kg.state.copy()
+    f_all = np.argsort(-kg.state.feature_sizes)[:6]
+    target.feature_to_shard[f_all] = \
+        (target.feature_to_shard[f_all] + 1) % kg.n_shards
+    session = MigrationSession(kg, target, bytes_budget=1)   # 1 move per chunk
+    assert session.n_chunks == len(f_all)
+
+    views0 = list(kg.shards)
+    epoch0, builds0 = kg.epoch, kg.plan_builds
+    chunk = session.step()
+    assert kg.epoch == epoch0 + 1
+    kg.plan(q)
+    assert kg.plan_builds == builds0 + 1        # plan cache was invalidated
+    touched = {chunk.moves[0][1], chunk.moves[0][2]}
+    for s in range(kg.n_shards):
+        if s not in touched:
+            assert kg.shards[s] is views0[s]    # untouched views reused
+    session.drain()
+    assert session.done and session.progress() == 1.0
+    assert session.step() is None
+    assert sum(kg.shard_sizes()) == small_lubm.store.n_triples
+
+
+def test_noop_delta_keeps_plan_cache_and_epoch(small_lubm):
+    """Satellite: committing a state identical to the current one must not
+    wipe cached QueryPlans nor advance the epoch."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    p0 = kg.plan(small_lubm.queries["Q9"])
+    epoch0, builds0 = kg.epoch, kg.plan_builds
+    plan = kg.commit(kg.state.copy())
+    assert plan.n_moves == 0
+    assert kg.epoch == epoch0
+    assert kg.plan(small_lubm.queries["Q9"]) is p0
+    assert kg.plan_builds == builds0
+
+
+# --------------------------------------------------------------------------- #
+# service loop: budget knob, step/drain, interleaved windows
+# --------------------------------------------------------------------------- #
+
+def test_service_chunked_adapt_interleaves_with_query_batch(small_lubm):
+    """With a migration_budget, adapt() leaves a pending session; each
+    query_batch window applies exactly one chunk; results at every epoch are
+    identical to an atomically-committed twin service."""
+    window = small_lubm.extended_workload()
+    new10 = small_lubm.workload([f"EQ{i}" for i in range(1, 11)])
+
+    atomic = KGService.from_dataset(small_lubm, n_shards=4)
+    atomic.bootstrap(small_lubm.base_workload())
+    atomic.query_batch(window)
+    rep_a = atomic.adapt(new10)
+    assert atomic.session is None                   # drained inside adapt
+
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 migration_budget=120_000)
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(window)
+    rep_c = svc.adapt(new10)
+    assert rep_c.accepted == rep_a.accepted
+    assert rep_c.plan.bytes == rep_a.plan.bytes
+    assert svc.session is not None and svc.session.n_chunks >= 3
+
+    ref = {q.name: canon_bindings(atomic.query(q)[0]) for q in window[:4]}
+    windows = 0
+    while svc.session is not None:
+        results = svc.query_batch(window[:4])       # serve + one chunk ahead
+        for q, (b, _) in zip(window[:4], results):
+            assert canon_bindings(b) == ref[q.name], q.name
+        windows += 1
+    assert windows >= 3
+    assert np.array_equal(svc.kg.state.feature_to_shard,
+                          atomic.kg.state.feature_to_shard)
+
+
+def test_service_step_and_drain(small_lubm):
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 migration_budget=60_000)
+    svc.bootstrap(small_lubm.base_workload())
+    assert svc.step() is None and svc.drain() == 0  # idle: no session
+    svc.query_batch(small_lubm.extended_workload())
+    report = svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    if not report.accepted:
+        pytest.skip("round rejected on this layout")
+    n = svc.session.n_chunks
+    assert svc.step() is not None                   # one chunk applied
+    assert svc.drain() == n - 1                     # the rest
+    assert svc.session is None
+
+
+def test_adapt_finishes_inflight_session_first(small_lubm):
+    """A new round while a drain is in flight finishes the old session, so
+    the controller's view and the served layout never diverge."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 migration_budget=60_000)
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(small_lubm.extended_workload())
+    svc.adapt(small_lubm.workload(["EQ1", "EQ2", "EQ3"]))
+    pending = svc.session
+    if pending is not None:
+        target1 = pending.target
+        svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(4, 11)]))
+        assert pending.done                         # old drain completed
+        assert pending.applied == pending.n_chunks
+        del target1
+
+
+# --------------------------------------------------------------------------- #
+# migration-cost-aware guard + TM satellites
+# --------------------------------------------------------------------------- #
+
+def test_guard_rejects_when_migration_cost_dominates(small_lubm):
+    """Same round, same gain — but a network where shipping the plan costs
+    more than the savings amortized over the window must be rejected."""
+    def round_with(net, amortize):
+        svc = KGService.from_dataset(
+            small_lubm, n_shards=4, net=net,
+            config=AdaptConfig(amortize_window=amortize))
+        svc.bootstrap(small_lubm.base_workload())
+        svc.query_batch(small_lubm.extended_workload())
+        return svc.adapt(small_lubm.workload([f"EQ{i}"
+                                              for i in range(1, 11)]))
+
+    ok = round_with(None, None)
+    assert ok.accepted and ok.migration_s > 0 and ok.amortize_window > 0
+
+    slow = qexec.NetworkModel(bandwidth_Bps=1.0)    # ~bytes seconds to ship
+    rejected = round_with(slow, 1)
+    assert not rejected.accepted
+    assert rejected.plan.n_moves == 0               # reverted
+    assert rejected.migration_s > rejected.t_base - rejected.t_new
+
+
+def test_guard_rejects_with_zero_amortize_window(small_lubm):
+    """amortize_window=0 declares no future executions to amortize over:
+    any positive migration cost must be rejected, however large the gain."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 config=AdaptConfig(amortize_window=0))
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(small_lubm.extended_workload())
+    report = svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert not report.accepted
+    assert report.amortize_window == 0 and report.plan.n_moves == 0
+
+
+def test_drain_completion_restarts_tm_window(small_lubm):
+    """The TM observes hybrid-layout times while draining; finishing the
+    drain must restart the window so the pinned post-migration baseline is
+    not compared against mid-drain observations (no spurious round)."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 migration_budget=120_000)
+    svc.bootstrap(small_lubm.base_workload())
+    window = small_lubm.extended_workload()
+    svc.query_batch(window)
+    report = svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    if not report.accepted:
+        pytest.skip("round rejected on this layout")
+    while svc.session is not None:
+        svc.query_batch(window)                 # hybrid-layout observations
+    # the final chunk applies (and restarts the TM) ahead of the last
+    # window, so only final-layout observations remain: exactly one per
+    # query, averaging to the pinned t_new baseline — no spurious round
+    ctrl = svc.controller
+    assert all(len(v) == 1 for v in ctrl.exec_times.values())
+    assert ctrl.avg_execution_time() == pytest.approx(report.t_new)
+    assert not svc.should_adapt()
+
+
+def test_should_adapt_requires_an_observation(small_lubm):
+    """Satellite: a fresh session (no baseline AND empty TM) must not
+    trigger an adaptation round."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    svc.bootstrap(small_lubm.base_workload())
+    assert not svc.should_adapt()                   # empty TM: nothing to fix
+    assert svc.maybe_adapt() is None
+    svc.query(small_lubm.queries["Q6"])
+    assert svc.should_adapt()                       # observed, no baseline
+
+    ctrl = AWAPartController(svc.space, 4)
+    assert not ctrl.should_adapt()
+    ctrl.observe(small_lubm.queries["Q6"], 0.5)
+    assert ctrl.should_adapt()
+
+
+def test_reset_baseline_clears_nonadaptive_times(small_lubm):
+    """Satellite: reset_baseline restarts the TM window consistently for
+    non-adaptive strategies too."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 partitioner=HashPartitioner())
+    svc.bootstrap()
+    svc.query(small_lubm.queries["Q6"])
+    assert svc.avg_execution_time() > 0
+    svc.reset_baseline()
+    assert svc.avg_execution_time() == 0.0
