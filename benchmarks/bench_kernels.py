@@ -17,6 +17,7 @@ import numpy as np
 from repro.kernels.flash_attention import ref as fref
 from repro.kernels.jaccard import kernel as jkernel
 from repro.kernels.jaccard import ref as jref
+from repro.kernels.join import ops as join_ops
 from repro.kernels.mamba2_ssd import kernel as skernel
 from repro.kernels.mamba2_ssd import ref as sref
 from repro.kernels.rwkv6_wkv import kernel as wkernel
@@ -32,9 +33,51 @@ def _time(fn, n=3):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run() -> List[Tuple[str, float, str]]:
+def _join_fixture(rng, nl: int, nr: int):
+    """Probe/build key columns with a 50% hit rate (executor-shaped)."""
+    lcs = [rng.integers(0, 2**31 - 1, nl).astype(np.int64) for _ in range(2)]
+    rcs = [rng.integers(0, 2**31 - 1, nr).astype(np.int64) for _ in range(2)]
+    n = min(nl, nr) // 2
+    for c in range(2):
+        rcs[c][:n] = lcs[c][:n]
+    return lcs, rcs
+
+
+def join_rows(rng, *, dry_run: bool = False) -> List[Tuple[str, float, str]]:
+    """Join-kernel rows: the jitted-jnp oracle (the ``JaxExecutor``
+    baseline probe) vs the Pallas word-pair path (interpret on CPU).
+    ``--dry-run`` validates the kernel at a tiny shape and skips timings."""
+    rows: List[Tuple[str, float, str]] = []
+    nl, nr = (64, 64) if dry_run else (4096, 4096)
+    lcs, rcs = _join_fixture(rng, nl, nr)
+    ref = join_ops.hash_probe_oracle(lcs, rcs)
+    got = join_ops.hash_probe(lcs, rcs, use_kernel=True, interpret=True)
+    for a, b, name in zip(ref, got, ("order", "lo", "counts")):
+        assert np.array_equal(a, b), f"join kernel mismatch: {name}"
+    if dry_run:
+        rows.append(("kern/join_dry_run_ok", 1.0,
+                     f"nl={nl}_nr={nr}_matches={int(ref[2].sum())}"))
+        return rows
+    t_oracle = _time(lambda: join_ops.hash_probe_oracle(lcs, rcs))
+    rows.append((f"kern/join{nl}_probe_jnp_us", t_oracle,
+                 "jitted_oracle_2col"))
+    rows.append((f"kern/join{nl}_probe_pallas_interp_us", _time(
+        lambda: join_ops.hash_probe(lcs, rcs, use_kernel=True,
+                                    interpret=True), n=1), "interpret-mode"))
+    cols = np.stack(lcs, axis=1)
+    rows.append((f"kern/join{nl}_pack_jnp_us", _time(
+        lambda: join_ops.pack_keys(cols, use_kernel=False)), ""))
+    rows.append((f"kern/join{nl}_pack_pallas_interp_us", _time(
+        lambda: join_ops.pack_keys(cols, use_kernel=True, interpret=True),
+        n=1), "interpret-mode"))
+    return rows
+
+
+def run(*, dry_run: bool = False) -> List[Tuple[str, float, str]]:
     rng = np.random.default_rng(0)
-    rows = []
+    if dry_run:
+        return join_rows(rng, dry_run=True)
+    rows = join_rows(rng)
 
     # jaccard: jnp oracle vs pallas-interpret (correctness-checked timing)
     bm = jnp.asarray(rng.integers(0, 2 ** 32, (256, 32), dtype=np.uint32))
@@ -78,3 +121,19 @@ def run() -> List[Tuple[str, float, str]]:
                                      a[0], d[0], ss0[:, 0]))
     rows.append(("kern/ssd256_scan_us", _time(f_ssd), "per-head"))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate the join kernel at a tiny shape and exit")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(dry_run=args.dry_run):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -74,6 +74,10 @@ t0 = time.perf_counter()
 batched = svc.query_batch(window)                     # jax, one batch
 wall_jx = time.perf_counter() - t0
 assert all(a[1].rows == b[1].rows for a, b in zip(per_query, batched))
+svc.executor = JaxExecutor(pallas=True)               # "jax-pallas": probes
+pallas = svc.query_batch(window)                      # via the Pallas join
+assert all(a[1].rows == b[1].rows                     # kernel family
+           for a, b in zip(per_query, pallas))        # (docs/kernels.md)
 print(f"\nworkload window x{len(window)}: numpy per-query {wall_np*1e3:.0f} "
       f"ms -> jax batch {wall_jx*1e3:.0f} ms "
       f"({wall_np / max(wall_jx, 1e-9):.1f}x)")

@@ -26,7 +26,8 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=8)
     ap.add_argument("--batches", type=int, default=12)
     ap.add_argument("--queries-per-batch", type=int, default=24)
-    ap.add_argument("--executor", default="jax", choices=["numpy", "jax"])
+    ap.add_argument("--executor", default="jax",
+                choices=["numpy", "jax", "jax-pallas"])
     ap.add_argument("--migration-budget", type=int, default=None,
                     help="bytes of migration traffic applied per batch "
                          "(default: atomic commit inside the adapt round)")

@@ -11,7 +11,7 @@ python -m pytest -x -q
 echo "== smoke: examples/quickstart.py (KGService + all strategies) =="
 python examples/quickstart.py
 
-echo "== smoke: query_batch on LUBM(1) under both executors =="
+echo "== smoke: query_batch on LUBM(1) under every executor backend =="
 python - <<'EOF'
 from repro.api import KGService
 from repro.graph import lubm
@@ -19,7 +19,7 @@ from repro.graph import lubm
 ds = lubm.load(1, seed=0)
 window = ds.extended_workload()
 rows = {}
-for name in ("numpy", "jax"):
+for name in ("numpy", "jax", "jax-pallas"):
     svc = KGService.from_dataset(ds, n_shards=4, executor=name)
     kg = svc.bootstrap(ds.base_workload())
     results = svc.query_batch(window)
@@ -28,7 +28,8 @@ for name in ("numpy", "jax"):
     rows[name] = [st.rows for _, st in results]
     print(f"[ci] query_batch x{len(window)} executor={name}: "
           f"{sum(rows[name])} total rows")
-assert rows["numpy"] == rows["jax"], "executor backends disagree"
+assert rows["numpy"] == rows["jax"] == rows["jax-pallas"], \
+    "executor backends disagree"
 EOF
 
 echo "== smoke: throttled migration drain on LUBM(1) =="
@@ -68,6 +69,37 @@ EOF
 
 echo "== smoke: benchmarks/bench_migration.py --dry-run =="
 python benchmarks/bench_migration.py --dry-run
+
+echo "== smoke: benchmarks/bench_kernels.py --dry-run (join kernel) =="
+python benchmarks/bench_kernels.py --dry-run
+
+echo "== docs drift guard: run every <!-- ci:run --> fenced snippet =="
+python - <<'EOF'
+import pathlib
+import re
+import subprocess
+import sys
+
+MARK = "<!-- ci:run -->"
+# the fence must immediately follow its marker (whitespace only between),
+# so the guard can never wander off and run some unrelated later fence
+FENCE = re.compile(r"\s*```python\n(.*?)```", re.DOTALL)
+ran = 0
+for doc in sorted(pathlib.Path("docs").glob("*.md")):
+    text = doc.read_text()
+    for pos in (m.end() for m in re.finditer(re.escape(MARK), text)):
+        fence = FENCE.match(text, pos)
+        assert fence is not None, \
+            f"{doc}: {MARK} not followed by a python fence"
+        proc = subprocess.run([sys.executable, "-"],
+                              input=fence.group(1), text=True)
+        if proc.returncode != 0:
+            sys.exit(f"[ci] snippet from {doc} FAILED — the doc has "
+                     "drifted from the code")
+        ran += 1
+        print(f"[ci] docs snippet ok: {doc} (#{ran})")
+assert ran >= 3, f"expected >=3 marked snippets across docs/, found {ran}"
+EOF
 
 echo "== deprecation: no in-repo caller of the shimmed engine entry points =="
 # the shims live in src/repro/query/engine.py and are exercised (with

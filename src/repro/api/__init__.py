@@ -12,7 +12,9 @@ Everything callers need to serve a partitioned knowledge graph:
   migration (``repro.migrate``), throttled by the service's
   ``migration_budget`` knob;
 * executors: :class:`Executor` protocol with :class:`NumpyExecutor`
-  (reference) and :class:`JaxExecutor` (batched), re-exported from
+  (reference) and :class:`JaxExecutor` (batched; ``pallas=True`` — the
+  ``executor="jax-pallas"`` knob — probes joins through the
+  ``repro.kernels.join`` Pallas kernel family), re-exported from
   ``repro.query.exec``.
 
 See ``docs/api.md`` for the quickstart.

@@ -1,0 +1,68 @@
+"""Shared kernel/fallback dispatch policy for ``repro.kernels``.
+
+Every op module under ``src/repro/kernels`` answers the same three-way
+question — compiled Pallas kernel, ``interpret=True`` kernel, or jnp
+oracle — and until this module existed each ``ops.py`` hard-coded its own
+size threshold (``jaccard`` shipped a literal ``>= 256``). The policy now
+lives in one place:
+
+* :func:`on_tpu` — are we on a real TPU backend (compiled kernels)?
+* :func:`kernel_threshold` — the problem-size floor below which the jnp
+  oracle wins (no tiling/pad overhead). Overridable per-process via the
+  ``REPRO_KERNEL_THRESHOLD`` environment variable or per-call via the
+  ``threshold=`` argument.
+* :func:`resolve` — turn a caller's ``use_kernel``/``interpret`` pair
+  (``None`` = auto) into concrete booleans.
+
+Two auto policies exist, selected by ``hot_path``:
+
+* ``hot_path=False`` (analysis ops, e.g. ``jaccard``): the kernel runs for
+  any large-enough problem, *including* ``interpret=True`` on CPU — these
+  ops fire once per adaptation round, so the interpreter cost is an
+  acceptable price for exercising the real kernel everywhere.
+* ``hot_path=True`` (serving ops, e.g. ``join``): interpret mode is never
+  chosen automatically — on CPU the jnp oracle serves (XLA-compiled, fast),
+  and the Pallas kernel runs only on TPU or when explicitly forced
+  (``use_kernel=True``, how the equivalence tests pin it).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+DEFAULT_KERNEL_THRESHOLD = 256
+_ENV_VAR = "REPRO_KERNEL_THRESHOLD"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernel_threshold(threshold: int | None = None) -> int:
+    """The dispatch size floor: explicit argument > env override > default."""
+    if threshold is not None:
+        return threshold
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        return int(env)
+    return DEFAULT_KERNEL_THRESHOLD
+
+
+def resolve(use_kernel: bool | None, interpret: bool | None, size: int, *,
+            hot_path: bool = False,
+            threshold: int | None = None) -> tuple[bool, bool]:
+    """Resolve a ``(use_kernel, interpret)`` pair for a problem of ``size``.
+
+    ``None`` means auto; explicit booleans pass through untouched (tests
+    force ``use_kernel=True`` to pin the kernel path bit-exactly on CPU).
+    """
+    floor = kernel_threshold(threshold)
+    if use_kernel is None:
+        if hot_path:
+            use_kernel = on_tpu() and size >= floor
+        else:
+            use_kernel = on_tpu() or size >= floor
+    if interpret is None:
+        interpret = not on_tpu()
+    return use_kernel, interpret

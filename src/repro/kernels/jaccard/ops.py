@@ -2,19 +2,18 @@
 
 On TPU the Pallas kernel runs compiled; on CPU (this container) it runs in
 ``interpret=True`` mode, and small problems fall back to the jnp oracle
-(same math, no tiling overhead).
+(same math, no tiling overhead). The size threshold and TPU detection live
+in the shared ``repro.kernels.dispatch`` policy (``hot_path=False``: this
+op fires once per adaptation round, so interpret mode on CPU is an
+acceptable price for exercising the real kernel everywhere).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
 from repro.kernels.jaccard import kernel, ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def jaccard_distance(bitmaps: jnp.ndarray | np.ndarray,
@@ -22,10 +21,8 @@ def jaccard_distance(bitmaps: jnp.ndarray | np.ndarray,
                      interpret: bool | None = None) -> jnp.ndarray:
     """Symmetric (Q, Q) Jaccard distance matrix from packed uint32 bitmaps."""
     a = jnp.asarray(bitmaps, dtype=jnp.uint32)
-    if use_kernel is None:
-        use_kernel = _on_tpu() or a.shape[0] >= 256
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             a.shape[0], hot_path=False)
     if not use_kernel:
         return ref.jaccard_distance(a, a)
-    if interpret is None:
-        interpret = not _on_tpu()
     return kernel.jaccard_distance_pallas(a, a, interpret=interpret)

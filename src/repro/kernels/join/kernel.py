@@ -1,0 +1,185 @@
+"""Pallas TPU kernels: hash-join key packing, sorted probe, masked gather.
+
+The executor's hash join has three vectorizable stages (the ragged pair
+expansion between them is data-dependent addressing arithmetic and stays on
+the host):
+
+1. **pack** — reduce the (N, K<=2) shared-variable key columns of each side
+   to one 62-bit key per row (base-2^31 positional packing; dictionary ids
+   are < 2^31).
+2. **probe** — for every probe-side key, the ``[lo, hi)`` range of equal
+   keys in the sorted build side (``searchsorted`` left/right).
+3. **gather** — index the build side's sort permutation with the expanded
+   match positions.
+
+TPUs have no int64, so packed keys travel through the kernels as two 32-bit
+words: ``hi = key >> 32`` (int32, < 2^30 for K <= 2) and ``lo = key &
+0xffffffff`` (uint32). Lexicographic order on ``(hi, lo-as-unsigned)``
+equals int64 order on the packed key, which is what makes the probe exact.
+
+The probe kernel is **sort-free on device**: instead of binary search (a
+log-depth chain of dynamic gathers — hostile to the VPU), each (BN, BM)
+grid step broadcast-compares a probe panel against a build panel and
+accumulates ``lo = #build < probe`` / ``hi = #build <= probe`` counts.
+On a sorted build side those counts *are* the searchsorted indices. The
+build-side sort itself stays on the host (``np.argsort``), exactly like the
+executor's jitted-jnp path.
+
+Grids: pack/gather are 1-D over row tiles; probe is (N/BN, M/BM) with the
+output accumulated over the build axis (TPU grids iterate sequentially, so
+read-modify-write on the j axis is the standard reduction pattern). All
+arrays are carried as (1, N) lane-major panels to respect the 128-lane
+tiling constraint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HI_INF = jnp.int32(2**31 - 1)          # > any real hi word (< 2^30)
+_LO_INF = jnp.uint32(0xFFFFFFFF)
+
+
+def _pad_to(x: jnp.ndarray, n: int, fill) -> jnp.ndarray:
+    """Pad the last axis to length ``n`` with ``fill``."""
+    return jnp.full(x.shape[:-1] + (n,), fill, x.dtype).at[..., :x.shape[-1]] \
+        .set(x)
+
+
+# --------------------------------------------------------------------------- #
+# pack
+# --------------------------------------------------------------------------- #
+
+def _pack_kernel(cols_ref, hi_ref, lo_ref, *, n_cols: int):
+    c0 = cols_ref[0, :].astype(jnp.uint32)            # ids < 2^31
+    if n_cols == 1:                                   # key = c0
+        hi = jnp.zeros_like(c0, jnp.int32)
+        lo = c0
+    else:                                             # key = c0 * 2^31 + c1
+        c1 = cols_ref[1, :].astype(jnp.uint32)
+        hi = (c0 >> 1).astype(jnp.int32)
+        lo = ((c0 & jnp.uint32(1)) << 31) | c1
+    hi_ref[0, :] = hi
+    lo_ref[0, :] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pack_keys_pallas(cols: jnp.ndarray, *, block_n: int = 256,
+                     interpret: bool = False,
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, K<=2) int32 key columns -> ``(hi int32, lo uint32)`` word pair
+    per row, the split representation of the base-2^31 packed int64 key."""
+    n, k = cols.shape
+    assert k in (1, 2), f"key columns must be reduced to <= 2, got {k}"
+    np_ = max(block_n, (n + block_n - 1) // block_n * block_n)
+    cols_t = _pad_to(cols.T.astype(jnp.int32), np_, 0)
+    hi, lo = pl.pallas_call(
+        functools.partial(_pack_kernel, n_cols=k),
+        grid=(np_ // block_n,),
+        in_specs=[pl.BlockSpec((k, block_n), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                   pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.int32),
+                   jax.ShapeDtypeStruct((1, np_), jnp.uint32)],
+        interpret=interpret,
+    )(cols_t)
+    return hi[0, :n], lo[0, :n]
+
+
+# --------------------------------------------------------------------------- #
+# probe
+# --------------------------------------------------------------------------- #
+
+def _probe_kernel(bh_ref, bl_ref, ph_ref, pl_ref, lo_ref, hi_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    bh = bh_ref[0, :]                                 # (BM,) int32
+    bl = bl_ref[0, :]                                 # (BM,) uint32
+    ph = ph_ref[0, :]                                 # (BN,) int32
+    plo = pl_ref[0, :]                                # (BN,) uint32
+    # (BN, BM) broadcast compare, lexicographic on the (hi, lo) word pair
+    hi_lt = bh[None, :] < ph[:, None]
+    hi_eq = bh[None, :] == ph[:, None]
+    lt = hi_lt | (hi_eq & (bl[None, :] < plo[:, None]))
+    le = lt | (hi_eq & (bl[None, :] == plo[:, None]))
+    lo_ref[0, :] += lt.sum(axis=1).astype(jnp.int32)
+    hi_ref[0, :] += le.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "interpret"))
+def probe_sorted_pallas(build_hi: jnp.ndarray, build_lo: jnp.ndarray,
+                        probe_hi: jnp.ndarray, probe_lo: jnp.ndarray, *,
+                        block_n: int = 256, block_m: int = 512,
+                        interpret: bool = False,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """searchsorted left/right of every probe key over the ascending build
+    keys, both sides as (hi, lo) word pairs. Build padding is +inf word
+    pairs, which never compare below a real probe key — the counts need no
+    post-hoc clamping."""
+    m, n = build_hi.shape[0], probe_hi.shape[0]
+    mp = max(block_m, (m + block_m - 1) // block_m * block_m)
+    np_ = max(block_n, (n + block_n - 1) // block_n * block_n)
+    bh = _pad_to(build_hi[None, :], mp, _HI_INF)
+    bl = _pad_to(build_lo[None, :], mp, _LO_INF)
+    ph = _pad_to(probe_hi[None, :], np_, _HI_INF)
+    plo = _pad_to(probe_lo[None, :], np_, _LO_INF)
+    lo, hi = pl.pallas_call(
+        _probe_kernel,
+        grid=(np_ // block_n, mp // block_m),
+        in_specs=[pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_n), lambda i, j: (0, i)),
+                  pl.BlockSpec((1, block_n), lambda i, j: (0, i))],
+        out_specs=[pl.BlockSpec((1, block_n), lambda i, j: (0, i)),
+                   pl.BlockSpec((1, block_n), lambda i, j: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.int32),
+                   jax.ShapeDtypeStruct((1, np_), jnp.int32)],
+        interpret=interpret,
+    )(bh, bl, ph, plo)
+    return lo[0, :n], hi[0, :n]
+
+
+# --------------------------------------------------------------------------- #
+# gather
+# --------------------------------------------------------------------------- #
+
+def _gather_kernel(val_ref, idx_ref, out_ref, *, n_values: int, fill: int):
+    vals = val_ref[0, :]                              # full table, resident
+    idx = idx_ref[0, :]
+    safe = jnp.clip(idx, 0, max(n_values - 1, 0))
+    out = jnp.take(vals, safe, axis=0)
+    out_ref[0, :] = jnp.where((idx >= 0) & (idx < n_values), out,
+                              jnp.asarray(fill, vals.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("fill", "block_n", "interpret"))
+def gather_rows_pallas(values: jnp.ndarray, idx: jnp.ndarray, *,
+                       fill: int = 0, block_n: int = 1024,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Masked gather ``values[idx]`` (int32), out-of-range -> ``fill``.
+
+    The value table stays resident across the row-tile grid (one VMEM
+    panel), each program gathers one tile of indices against it.
+    """
+    m, n = values.shape[0], idx.shape[0]
+    mp = max(128, (m + 127) // 128 * 128)
+    np_ = max(block_n, (n + block_n - 1) // block_n * block_n)
+    vals = _pad_to(values.astype(jnp.int32)[None, :], mp, 0)
+    idxp = _pad_to(idx.astype(jnp.int32)[None, :], np_, -1)
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, n_values=m, fill=fill),
+        grid=(np_ // block_n,),
+        in_specs=[pl.BlockSpec((1, mp), lambda i: (0, 0)),
+                  pl.BlockSpec((1, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.int32),
+        interpret=interpret,
+    )(vals, idxp)
+    return out[0, :n]

@@ -1,0 +1,269 @@
+"""Public ops: hash-join pack/probe/gather with kernel/oracle dispatch.
+
+Three layers, same math (see ``docs/kernels.md`` for the idiom):
+
+* :mod:`repro.kernels.join.kernel` — Pallas kernels, int64 keys split into
+  32-bit word pairs (TPU has no int64). Compiled on TPU, ``interpret=True``
+  on CPU.
+* :mod:`repro.kernels.join.ref` — the jnp oracle (int64 under
+  ``enable_x64``). Jitted with power-of-two shape buckets, this *is* the
+  ``JaxExecutor``'s original jitted probe path — the baseline the Pallas
+  kernels are benchmarked against.
+* this module — the dispatch seam the executor calls. The join sits on the
+  per-query serving hot path, so the auto policy is ``hot_path=True``
+  (``repro.kernels.dispatch``) plus two scaling guards (the quadratic
+  probe-work cap and the gather VMEM-residency cap below): compiled
+  kernels on TPU for large-enough in-envelope problems, the jitted oracle
+  for the rest of the device cases, and plain host numpy
+  (:func:`hash_probe_numpy`) when there is no device at all;
+  ``use_kernel=True`` forces the kernel (interpret mode on CPU — how the
+  equivalence tests pin bit-equality), ``use_kernel=False`` forces the
+  oracle.
+
+:func:`hash_probe` is the composite the executor uses: pack both sides,
+stable-sort the build side **on the host** (XLA's CPU sort is
+comparator-based and loses badly to ``np.argsort``; on TPU the sort is the
+one stage left on the host by design), probe every packed key. Returns
+``(order, lo, counts)`` exactly like the numpy reference's searchsorted
+probe, so the executors' ragged pair expansion is backend-agnostic.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import dispatch
+from repro.kernels.join import kernel, ref
+
+_INT64_MAX = np.iinfo(np.int64).max
+_oracle_cache: dict = {}
+
+# Auto-dispatch scalability guards (forced use_kernel=True bypasses both —
+# that's how tests pin the kernels at any shape). Read per call, like
+# dispatch.kernel_threshold, so env overrides work after import:
+#
+# * the count-probe kernel does O(nl * nr) word-pair compares — a win over
+#   binary search only while the compare budget is small; past the cap the
+#   log-depth oracle is asymptotically faster even with its device hops.
+# * the gather kernel keeps the whole value table resident in one VMEM
+#   panel; past ~2M int32 rows (8 MB of the ~16 MB VMEM) it cannot tile.
+
+def _probe_work_cap() -> int:
+    return int(os.environ.get("REPRO_JOIN_PROBE_WORK_CAP", str(1 << 32)))
+
+
+def _gather_resident_rows() -> int:
+    return int(os.environ.get("REPRO_JOIN_GATHER_RESIDENT_ROWS",
+                              str(1 << 21)))
+
+
+def _pad_pow2(a: np.ndarray, fill=0, min_size: int = 16) -> np.ndarray:
+    """Pad axis 0 to the next power of two (stable jit shape buckets)."""
+    n = a.shape[0]
+    m = max(min_size, 1 << max(n - 1, 0).bit_length())
+    if m == n:
+        return a
+    out = np.full((m,) + a.shape[1:], fill, a.dtype)
+    out[:n] = a
+    return out
+
+
+def _oracle_fns():
+    """Jitted oracle pack/search, shared by every join of every batch."""
+    import jax
+
+    if not _oracle_cache:
+        _oracle_cache.update(pack=jax.jit(ref.pack_keys),
+                             search=jax.jit(ref.probe_sorted))
+    return _oracle_cache["pack"], _oracle_cache["search"]
+
+
+def _split_words(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Nonnegative int64 keys < 2^62 -> (hi int32, lo uint32) word pair.
+
+    The bound is the K<=2 base-2^31 packing envelope and what keeps the
+    probe kernel's +inf padding sentinel (hi = 2^31-1) strictly above every
+    real key; a key at or past 2^62 would compare equal to padding and
+    inflate the hi counts past the build length."""
+    if keys.size and (keys >> 62).any():
+        raise ValueError("word-pair kernels require nonnegative packed keys "
+                         "< 2^62 (the K<=2 base-2^31 packing envelope)")
+    return ((keys >> 32).astype(np.int32),
+            (keys & np.int64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def _join_words(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    return (hi.astype(np.int64) << 32) | lo.astype(np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# granular ops (bench / tests / docs surface)
+# --------------------------------------------------------------------------- #
+
+def pack_keys(cols: np.ndarray, *, use_kernel: bool | None = None,
+              interpret: bool | None = None) -> np.ndarray:
+    """(N, K<=2) key columns (values < 2^31) -> (N,) packed int64 keys."""
+    cols = np.asarray(cols)
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             cols.shape[0], hot_path=True)
+    if not use_kernel:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            pack, _ = _oracle_fns()
+            return np.asarray(pack(cols.astype(np.int64)))
+    hi, lo = kernel.pack_keys_pallas(cols.astype(np.int32),
+                                     interpret=interpret)
+    return _join_words(np.asarray(hi), np.asarray(lo))
+
+
+def probe_sorted(build_sorted: np.ndarray, probe: np.ndarray, *,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None,
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """searchsorted left/right of nonnegative int64 ``probe`` keys over the
+    ascending ``build_sorted`` keys; returns ``(lo, hi)`` index arrays."""
+    build_sorted = np.asarray(build_sorted, np.int64)
+    probe = np.asarray(probe, np.int64)
+    size = max(build_sorted.shape[0], probe.shape[0])
+    auto = use_kernel is None
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret, size,
+                                             hot_path=True)
+    if (use_kernel and auto
+            and build_sorted.shape[0] * probe.shape[0] > _probe_work_cap()):
+        use_kernel = False             # quadratic compare budget exceeded
+    if not use_kernel:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            _, search = _oracle_fns()
+            lo, hi = search(build_sorted, probe)
+            return np.asarray(lo), np.asarray(hi)
+    bh, bl = _split_words(build_sorted)
+    ph, pl_ = _split_words(probe)
+    lo, hi = kernel.probe_sorted_pallas(bh, bl, ph, pl_, interpret=interpret)
+    return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
+
+
+def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
+                use_kernel: bool | None = None,
+                interpret: bool | None = None,
+                assume_inbounds: bool = False) -> np.ndarray:
+    """Masked gather ``values[idx]`` (out-of-range -> ``fill``); the host
+    gather is its own oracle — a one-op kernel needs no jnp round trip.
+
+    ``assume_inbounds=True`` lets a caller that guarantees valid indices
+    (the executor's expansion positions are constructed in range) skip the
+    host tier's masking passes; the kernel tier masks either way (the mask
+    is inert for valid indices)."""
+    values = np.asarray(values)
+    idx = np.asarray(idx)
+    auto = use_kernel is None
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             idx.shape[0], hot_path=True)
+    if use_kernel and auto and values.shape[0] > _gather_resident_rows():
+        use_kernel = False             # table would not fit one VMEM panel
+    if use_kernel and values.size and (
+            values.min() < -(1 << 31) or values.max() >= 1 << 31):
+        # the kernel carries values as int32 words; out-of-envelope tables
+        # would silently truncate, so auto falls back and forced raises
+        if not auto:
+            raise ValueError("gather kernel requires int32-range values")
+        use_kernel = False
+    if not use_kernel:
+        if assume_inbounds:
+            return values[idx]
+        valid = (idx >= 0) & (idx < len(values))
+        out = np.full(idx.shape, fill,
+                      values.dtype if len(values) else np.int32)
+        if len(values):
+            out[valid] = values[np.clip(idx, 0, len(values) - 1)][valid]
+        return out
+    got = kernel.gather_rows_pallas(values.astype(np.int32),
+                                    idx.astype(np.int32), fill=fill,
+                                    interpret=interpret)
+    return np.asarray(got).astype(values.dtype if values.size else np.int32)
+
+
+# --------------------------------------------------------------------------- #
+# the executor's composite probe
+# --------------------------------------------------------------------------- #
+
+def hash_probe_numpy(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray],
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The host probe: the same base-2^31 pack + stable sort + searchsorted
+    with no device round trip. This is what auto dispatch serves on CPU —
+    per-join jnp dispatches lose to host numpy there (measured ~1.8x on the
+    LUBM(3) window), so the device tiers engage only on TPU or when
+    forced."""
+    lk = _pack_np(lcs)
+    rk = _pack_np(rcs)
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    lo = np.searchsorted(rk_sorted, lk, side="left")
+    hi = np.searchsorted(rk_sorted, lk, side="right")
+    return order, lo, hi - lo
+
+
+def _pack_np(cols: Sequence[np.ndarray]) -> np.ndarray:
+    key = cols[0]
+    for c in cols[1:]:
+        key = key * np.int64(1 << 31) + c
+    return key
+
+
+def hash_probe_oracle(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray],
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The jitted-jnp probe (the pre-Pallas ``JaxExecutor`` hot path):
+    pow2-padded pack + searchsorted under ``enable_x64``, host build sort.
+    Padding keys are int64-max so they never binary-search below a real
+    key; results are clamped back to the true build size."""
+    from jax.experimental import enable_x64
+
+    nl, nr = len(lcs[0]), len(rcs[0])
+    with enable_x64():
+        pack, search = _oracle_fns()
+        lk = np.asarray(pack(_pad_pow2(np.stack(lcs, axis=1))))[:nl]
+        rk = np.asarray(pack(_pad_pow2(np.stack(rcs, axis=1))))[:nr]
+        order = np.argsort(rk, kind="stable")
+        lo_j, hi_j = search(_pad_pow2(rk[order], fill=_INT64_MAX),
+                            _pad_pow2(lk, fill=_INT64_MAX))
+    lo = np.minimum(np.asarray(lo_j)[:nl], nr)
+    hi = np.minimum(np.asarray(hi_j)[:nl], nr)
+    return order, lo, hi - lo
+
+
+def hash_probe(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray], *,
+               use_kernel: bool | None = None,
+               interpret: bool | None = None,
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Full hash-probe of probe-side key columns ``lcs`` against build-side
+    ``rcs`` (each a list of <= 2 int columns with values < 2^31). Returns
+    ``(order, lo, counts)``: the build side's stable sort permutation and,
+    per probe row, the start/length of its match run in that order."""
+    assert len(lcs) <= 2 and len(rcs) <= 2, "reduce key columns first"
+    nl, nr = len(lcs[0]), len(rcs[0])
+    auto = use_kernel is None
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             max(nl, nr), hot_path=True)
+    if use_kernel and auto and nl * nr > _probe_work_cap():
+        use_kernel = False             # quadratic compare budget exceeded
+    if not use_kernel:
+        # three tiers: auto on CPU stays on the host (no device round trip);
+        # the jnp oracle runs when explicitly forced (use_kernel=False) or
+        # when a TPU is present but the problem is under the size floor
+        if auto and not dispatch.on_tpu():
+            return hash_probe_numpy(lcs, rcs)
+        return hash_probe_oracle(lcs, rcs)
+    lh, ll = kernel.pack_keys_pallas(
+        np.stack(lcs, axis=1).astype(np.int32), interpret=interpret)
+    rh, rl = kernel.pack_keys_pallas(
+        np.stack(rcs, axis=1).astype(np.int32), interpret=interpret)
+    lh, ll = np.asarray(lh), np.asarray(ll)
+    rh, rl = np.asarray(rh), np.asarray(rl)
+    # stable build-side sort on the host, by the recombined int64 key
+    order = np.argsort(_join_words(rh, rl), kind="stable")
+    lo, hi = kernel.probe_sorted_pallas(rh[order], rl[order], lh, ll,
+                                        interpret=interpret)
+    lo = np.asarray(lo, np.int64)
+    return order, lo, np.asarray(hi, np.int64) - lo

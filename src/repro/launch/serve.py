@@ -6,7 +6,9 @@ over the shards -> monitor per-query runtimes (TM) -> on workload change,
 run the Fig.-5 adaptation as an incremental shard-view delta -> keep
 serving. ``--experiment 1|2`` reproduces the paper's two evaluations,
 ``--partitioner hash|wawpart|awapart`` swaps the strategy,
-``--executor numpy|jax`` swaps the query backend under the same harness, and
+``--executor numpy|jax|jax-pallas`` swaps the query backend under the same
+harness (``jax-pallas`` probes hash joins through the ``repro.kernels.join``
+Pallas kernels — see ``docs/kernels.md``), and
 ``--migration-budget BYTES`` throttles accepted migrations into a chunked
 ``MigrationSession`` drained one chunk per serving window (default: atomic).
 
@@ -148,8 +150,10 @@ def main() -> None:
     ap.add_argument("--experiment", type=int, default=1, choices=[1, 2])
     ap.add_argument("--partitioner", default="awapart",
                     choices=sorted(PARTITIONERS))
-    ap.add_argument("--executor", default="numpy", choices=["numpy", "jax"],
-                    help="query backend (jax = batched execution)")
+    ap.add_argument("--executor", default="numpy",
+                    choices=["numpy", "jax", "jax-pallas"],
+                    help="query backend (jax = batched execution, "
+                         "jax-pallas = batched + Pallas join kernels)")
     ap.add_argument("--migration-budget", type=int, default=None,
                     help="bytes of migration traffic per serving window "
                          "(default: atomic commit)")

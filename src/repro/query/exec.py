@@ -7,14 +7,16 @@ Two backends behind one ``Executor`` protocol:
   byte-identical to the pre-split ``engine.execute``.
 * :class:`JaxExecutor` — the batched backend: patterns are matched once
   against the global store (results deduplicated across the whole batch),
-  the hash-join key packing / probe runs as jitted jax kernels (dispatched
-  per the ``kernels/jaccard/ops.py`` idiom: compiled on TPU, same-math
-  numpy fallback elsewhere, forceable via ``probe_kernel=``), and the
-  federation accounting for every distinct pattern in the window is ONE
-  dispatched scatter-add (``bincount`` over ``triple_shard[match]``
-  segments) instead of a python loop per shard per query. Bindings and
-  stats match the numpy backend exactly (modulo row order and the
-  informational ``wall_s``).
+  the hash-join key packing / probe runs through ``repro.kernels.join``
+  (``pallas=False``: the jitted-jnp oracle kernels; ``pallas=True`` — the
+  ``executor="jax-pallas"`` knob — the Pallas sorted-probe kernel family,
+  dispatched per ``repro.kernels.dispatch``: compiled on TPU,
+  ``interpret=True`` when forced on CPU, jnp oracle fallback; see
+  ``docs/kernels.md``), and the federation accounting for every distinct
+  pattern in the window is ONE dispatched scatter-add (``bincount`` over
+  ``triple_shard[match]`` segments) instead of a python loop per shard per
+  query. Bindings and stats match the numpy backend exactly (modulo row
+  order and the informational ``wall_s``).
 
 Execution model mirrors the paper's federated SPARQL (Sec. IV): a query runs
 at its Primary Processing Node (PPN) and every triple pattern whose matches
@@ -169,16 +171,15 @@ def _key_columns(table: Bindings, cols: Bindings, shared: Sequence[int],
     return lcs, rcs
 
 
-def _pack_key_list(key_cols: Sequence[np.ndarray]) -> np.ndarray:
-    key = key_cols[0]
-    for c in key_cols[1:]:
-        key = key * np.int64(1 << 31) + c
-    return key
-
-
 def _join_numpy(table: Optional[Bindings], pat, rows: np.ndarray,
                 stats: ExecStats, max_rows: int) -> Optional[Bindings]:
-    """Hash-join current binding table with matched triples on shared vars."""
+    """Hash-join current binding table with matched triples on shared vars.
+    The key packing + searchsorted probe is ``join.ops.hash_probe_numpy``
+    (one copy of the base-2^31 packing math repo-wide); the per-left-row
+    run concatenation below is the readable reference expansion every
+    backend's vectorized equivalent must reproduce."""
+    from repro.kernels.join import ops as join_ops
+
     cols = _pattern_cols(pat, rows)
     if table is None:
         return cols
@@ -189,15 +190,9 @@ def _join_numpy(table: Optional[Bindings], pat, rows: np.ndarray,
         li, ri = _cartesian_indices(nl, nr, stats, max_rows)
     else:
         lcs, rcs = _key_columns(table, cols, shared)
-        lk = _pack_key_list(lcs)
-        rk = _pack_key_list(rcs)
-        order = np.argsort(rk, kind="stable")
-        rk_sorted = rk[order]
-        lo = np.searchsorted(rk_sorted, lk, side="left")
-        hi = np.searchsorted(rk_sorted, lk, side="right")
-        counts = hi - lo
-        li = np.repeat(np.arange(len(lk)), counts)
-        ri_parts = [order[l:h] for l, h in zip(lo, hi) if h > l]
+        order, lo, counts = join_ops.hash_probe_numpy(lcs, rcs)
+        li = np.repeat(np.arange(len(lo)), counts)
+        ri_parts = [order[l:h] for l, h in zip(lo, lo + counts) if h > l]
         ri = (np.concatenate(ri_parts) if ri_parts
               else np.empty(0, dtype=np.int64))
     out: Bindings = {v: c[li] for v, c in table.items()}
@@ -267,99 +262,47 @@ class NumpyExecutor:
 # jax backend — batched execution
 # --------------------------------------------------------------------------- #
 
-_jax_kernel_cache: dict = {}
+# A probe spec names the backend that packs keys and binary-searches the
+# sorted build side; all three implementations live in
+# repro.kernels.join.ops: ("numpy", None) — host searchsorted, no device
+# round trip; ("oracle", None) — the jitted-jnp kernels (pow2-padded,
+# enable_x64); ("pallas", force) — the Pallas word-pair kernels under the
+# shared kernels.dispatch policy (force: None=auto, True/False pin a path).
+ProbeSpec = Tuple[str, Optional[bool]]
 
 
-def _jax_join_kernels():
-    """Two jitted kernels shared by every join of every batch:
-
-    * ``pack``   — vectorized key packing: (N, K) shared-var columns ->
-      one int64 key per row (the hash-join key);
-    * ``search`` — the hash probe: binary-search every (packed) probe key
-      against the sorted build side.
-
-    Inputs are padded to power-of-two buckets so the jit compile cache is
-    reused across joins. The build-side sort itself stays on the host
-    (XLA's CPU sort is comparator-based and loses badly to ``np.argsort``);
-    everything vectorizable runs in the kernels."""
-    import jax
-    import jax.numpy as jnp
-
-    if not _jax_kernel_cache:
-        @jax.jit
-        def pack(cols):
-            key = cols[:, 0]
-            for c in range(1, cols.shape[1]):
-                key = key * jnp.int64(1 << 31) + cols[:, c]
-            return key
-
-        @jax.jit
-        def search(rk_sorted, lk):
-            lo = jnp.searchsorted(rk_sorted, lk, side="left")
-            hi = jnp.searchsorted(rk_sorted, lk, side="right")
-            return lo, hi
-
-        _jax_kernel_cache.update(pack=pack, search=search)
-    return _jax_kernel_cache["pack"], _jax_kernel_cache["search"]
-
-
-_INT64_MAX = np.iinfo(np.int64).max
-
-
-def _pad_pow2(a: np.ndarray, fill=0, min_size: int = 16) -> np.ndarray:
-    """Pad axis 0 to the next power of two (stable jit shape buckets)."""
-    n = a.shape[0]
-    m = max(min_size, 1 << max(n - 1, 0).bit_length())
-    if m == n:
-        return a
-    out = np.full((m,) + a.shape[1:], fill, a.dtype)
-    out[:n] = a
-    return out
-
-
-def _probe(table: Bindings, cols: Bindings, shared, nl: int, nr: int,
-           use_kernel: bool) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _probe(table: Bindings, cols: Bindings, shared,
+           probe: ProbeSpec) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Hash-probe: pack shared-var columns into int64 keys, sort the build
     side, binary-search every probe key. Returns ``(order, lo, counts)``.
 
-    Kernel/fallback dispatch follows the idiom of the pallas kernels under
-    ``src/repro/kernels`` (see ``jaccard/ops.py``): on TPU the jitted jax
-    kernels run compiled; elsewhere the same math runs in numpy unless the
-    kernel path is forced (tests force it to pin bit-equality). Inputs to
-    the kernels are padded to power-of-two buckets so the jit cache is
-    reused across joins; the build-side sort always stays on the host
-    (XLA's CPU sort is comparator-based and loses badly to ``np.argsort``)."""
+    The implementations live in ``repro.kernels.join`` and follow the
+    repo-wide kernel/fallback dispatch idiom (``repro.kernels.dispatch``,
+    ``docs/kernels.md``): compiled Pallas kernels on TPU, ``interpret=True``
+    only when forced (tests pin bit-equality that way), jnp oracle /
+    host-numpy fallbacks elsewhere. The build-side sort always stays on
+    the host (XLA's CPU sort is comparator-based and loses badly to
+    ``np.argsort``)."""
+    from repro.kernels.join import ops as join_ops
+
     lcs, rcs = _key_columns(table, cols, shared)
-    if use_kernel:
-        from jax.experimental import enable_x64
-        with enable_x64():
-            pack, search = _jax_join_kernels()
-            lk = np.asarray(pack(_pad_pow2(np.stack(lcs, axis=1))))[:nl]
-            rk = np.asarray(pack(_pad_pow2(np.stack(rcs, axis=1))))[:nr]
-            order = np.argsort(rk, kind="stable")
-            # pad the sorted build side with int64-max so padding never
-            # binary-searches below a real key; clamp to nr for keys == max
-            lo_j, hi_j = search(_pad_pow2(rk[order], fill=_INT64_MAX),
-                                _pad_pow2(lk, fill=_INT64_MAX))
-        lo = np.minimum(np.asarray(lo_j)[:nl], nr)
-        hi = np.minimum(np.asarray(hi_j)[:nl], nr)
-    else:
-        lk = _pack_key_list(lcs)
-        rk = _pack_key_list(rcs)
-        order = np.argsort(rk, kind="stable")
-        rk_sorted = rk[order]
-        lo = np.searchsorted(rk_sorted, lk, side="left")
-        hi = np.searchsorted(rk_sorted, lk, side="right")
-    return order, lo, hi - lo
+    mode, force = probe
+    if mode == "pallas":
+        return join_ops.hash_probe(lcs, rcs, use_kernel=force)
+    if mode == "oracle":
+        return join_ops.hash_probe_oracle(lcs, rcs)
+    return join_ops.hash_probe_numpy(lcs, rcs)
 
 
 def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
-              stats: ExecStats, max_rows: int, use_kernel: bool,
+              stats: ExecStats, max_rows: int, probe: ProbeSpec,
               cols: Optional[Bindings] = None) -> Optional[Bindings]:
     """Same join semantics as :func:`_join_numpy`, with the key packing and
-    the searchsorted hash-probe vectorized via :func:`_probe` (int64 math
-    under ``enable_x64`` — packed keys overflow int32). The data-dependent
-    ragged expansion stays in numpy addressing arithmetic."""
+    the searchsorted hash-probe vectorized via :func:`_probe` (int64 math —
+    packed keys overflow int32 — carried as 32-bit word pairs on the Pallas
+    path). The data-dependent ragged expansion stays in numpy addressing
+    arithmetic; its final gather through the build-side sort permutation is
+    kernel-dispatched on the Pallas path."""
     cols = _pattern_cols(pat, rows) if cols is None else cols
     if table is None:
         return cols
@@ -368,25 +311,28 @@ def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
         nl, nr = _table_len(table), len(next(iter(cols.values())))
         li, ri = _cartesian_indices(nl, nr, stats, max_rows)
     else:
-        nl, nr = _table_len(table), len(next(iter(cols.values())))
-        order, lo, counts = _probe(table, cols, shared, nl, nr, use_kernel)
+        nl = _table_len(table)
+        order, lo, counts = _probe(table, cols, shared, probe)
         # per-left-row expansion of order[lo:hi] (matches the numpy backend's
         # pair enumeration order exactly)
         total = int(counts.sum())
         li = np.repeat(np.arange(nl), counts)
         starts = np.cumsum(counts) - counts
         offs = np.arange(total) - np.repeat(starts, counts)
-        ri = order[np.repeat(lo, counts) + offs]
+        pos = np.repeat(lo, counts) + offs
+        if probe[0] == "pallas":
+            # the op owns the whole dispatch (kernel on TPU within the
+            # VMEM-residency cap, single-pass host gather otherwise)
+            from repro.kernels.join import ops as join_ops
+            ri = join_ops.gather_rows(order, pos, use_kernel=probe[1],
+                                      assume_inbounds=True)
+        else:
+            ri = order[pos]
     out: Bindings = {v: c[li] for v, c in table.items()}
     for v, c in cols.items():
         if v not in out:
             out[v] = c[ri]
     return out
-
-
-def _on_tpu() -> bool:
-    import jax
-    return jax.default_backend() == "tpu"
 
 
 def _federation_bincounts(triple_shard: np.ndarray,
@@ -413,20 +359,39 @@ def _federation_bincounts(triple_shard: np.ndarray,
 class JaxExecutor:
     """Batched backend: global-store matching with pattern results
     (indices, rows, variable columns) deduplicated across the whole window,
-    jax key-packing/probe kernels for the hash joins, and one scatter-add
-    dispatch for the batch's federation accounting over distinct patterns.
+    kernel-dispatched key-packing/probe for the hash joins, and one
+    scatter-add dispatch for the batch's federation accounting over
+    distinct patterns.
 
-    ``probe_kernel`` follows the repo's kernel-dispatch idiom (see
-    ``kernels/jaccard/ops.py``): ``None`` = auto (compiled kernels on TPU,
-    same-math numpy elsewhere), ``True``/``False`` force the path — the
-    equivalence tests force ``True`` to pin the kernels' bit-equality."""
+    Two probe backends share the join machinery (``repro.kernels.join``):
+
+    * ``pallas=False`` (``executor="jax"``) — the jitted-jnp pack/search
+      kernels (``hash_probe_oracle``); ``probe_kernel`` = ``None`` auto
+      (jitted on TPU, same-math numpy elsewhere), ``True``/``False`` force.
+    * ``pallas=True`` (``executor="jax-pallas"``) — the Pallas sorted-probe
+      kernel family under the shared ``kernels.dispatch`` hot-path policy:
+      compiled kernels on TPU for large-enough joins, the jitted oracle
+      elsewhere; ``probe_kernel=True`` forces the kernels (``interpret``
+      mode on CPU — how the equivalence tests pin bit-equality)."""
 
     name = "jax"
 
     def __init__(self, max_join_rows: int = DEFAULT_MAX_JOIN_ROWS,
-                 probe_kernel: bool | None = None):
+                 probe_kernel: bool | None = None, pallas: bool = False):
         self.max_join_rows = max_join_rows
         self.probe_kernel = probe_kernel
+        self.pallas = pallas
+        if pallas:
+            self.name = "jax-pallas"
+
+    def _probe_spec(self) -> ProbeSpec:
+        from repro.kernels import dispatch
+
+        if self.pallas:
+            return ("pallas", self.probe_kernel)
+        jit = (self.probe_kernel if self.probe_kernel is not None
+               else dispatch.on_tpu())
+        return ("oracle" if jit else "numpy", None)
 
     def run(self, plan: qplan.QueryPlan, kg) -> Tuple[Bindings, ExecStats]:
         return self.run_batch([plan], kg)[0]
@@ -435,8 +400,7 @@ class JaxExecutor:
                   ) -> List[Tuple[Bindings, ExecStats]]:
         store = kg.store
         triple_shard = kg.triple_shard
-        use_kernel = (self.probe_kernel if self.probe_kernel is not None
-                      else _on_tpu())
+        probe = self._probe_spec()
         # global-store matches deduplicated across the whole window:
         # pattern -> (row ids, matched triples, variable columns)
         match_cache: Dict[tuple, tuple] = {}
@@ -463,7 +427,7 @@ class JaxExecutor:
                 ops_run += 1
                 before = _table_len(table)
                 table = _join_jax(table, op.pattern, rows, stats,
-                                  self.max_join_rows, use_kernel, cols=cols)
+                                  self.max_join_rows, probe, cols=cols)
                 stats.join_rows += before + len(rows) + _table_len(table)
                 if table is not None and _table_len(table) == 0:
                     break
@@ -503,12 +467,17 @@ class JaxExecutor:
         return results
 
 
-_EXECUTORS = {"numpy": NumpyExecutor, "jax": JaxExecutor}
+_EXECUTORS = {
+    "numpy": NumpyExecutor,
+    "jax": JaxExecutor,
+    "jax-pallas": lambda **kw: JaxExecutor(pallas=True, **kw),
+}
 
 
 def get_executor(spec: "str | Executor | None") -> Executor:
     """Resolve an executor: an instance passes through, a name (``"numpy"`` /
-    ``"jax"``) constructs the backend, ``None`` means the numpy reference."""
+    ``"jax"`` / ``"jax-pallas"``) constructs the backend, ``None`` means the
+    numpy reference."""
     if spec is None:
         return NumpyExecutor()
     if isinstance(spec, str):

@@ -78,11 +78,15 @@ def test_numpy_jax_equivalent_on_random_bgps(seed):
         q = _random_query(rng, store, name=f"R{i}")
         plan = qplan.plan(q, sharded)
         ref = qexec.NumpyExecutor().run(plan, sharded)
-        # probe_kernel=True pins the jax pack/search kernels' bit-equality;
-        # the default (auto) dispatch must agree too
+        # probe_kernel=True pins the kernels' bit-equality (the jitted jnp
+        # pack/search on "jax", the Pallas interpret-mode word-pair kernels
+        # on "jax-pallas"); the default (auto) dispatches must agree too
         for jx in (qexec.JaxExecutor(probe_kernel=True),
-                   qexec.JaxExecutor()):
-            _assert_equivalent(ref, jx.run(plan, sharded), (seed, q.patterns))
+                   qexec.JaxExecutor(),
+                   qexec.JaxExecutor(pallas=True, probe_kernel=True),
+                   qexec.JaxExecutor(pallas=True)):
+            _assert_equivalent(ref, jx.run(plan, sharded),
+                               (seed, jx.name, jx.probe_kernel, q.patterns))
 
 
 @settings(max_examples=6, deadline=None)
@@ -129,9 +133,13 @@ def test_cartesian_cap_enforced(make):
         make(max_join_rows=n - 1).run(plan, sharded)
 
 
-@pytest.mark.parametrize("make", [qexec.NumpyExecutor,
-                                  lambda: qexec.JaxExecutor(probe_kernel=True),
-                                  qexec.JaxExecutor])
+@pytest.mark.parametrize("make", [
+    qexec.NumpyExecutor,
+    lambda: qexec.JaxExecutor(probe_kernel=True),
+    qexec.JaxExecutor,
+    lambda: qexec.JaxExecutor(pallas=True, probe_kernel=True),
+    lambda: qexec.JaxExecutor(pallas=True),
+])
 def test_three_shared_vars_join_is_exact(make):
     """Regression: a base-2^31 pack of 3 shared vars wraps int64 and
     hash-equates rows whose leading key differs by 4 — the dense-rank
@@ -218,3 +226,63 @@ def test_deprecated_engine_shims_still_work(small_lubm, space):
                                         sharded.triple_shard)
     assert est.rows == stats.rows
     assert est.bytes_shipped == stats.bytes_shipped
+
+
+def test_executor_registry_resolves_jax_pallas():
+    """executor="jax-pallas" threads through get_executor / KGService and
+    names itself distinctly in telemetry."""
+    ex = qexec.get_executor("jax-pallas")
+    assert isinstance(ex, qexec.JaxExecutor) and ex.pallas
+    assert ex.name == "jax-pallas"
+    assert qexec.get_executor("jax").name == "jax"
+    with pytest.raises(ValueError, match="jax-pallas"):
+        qexec.get_executor("pallas")
+
+
+@pytest.mark.parametrize("probe_kernel", [True, None])
+def test_pallas_join_empty_probe_and_zero_match_edges(probe_kernel):
+    """The kernel path's padding must be inert at the raggedest edges: a
+    pattern with zero matches (empty probe side mid-pipeline) and a join
+    whose keys never meet (zero-match probe) both agree with numpy."""
+    d = Dictionary()
+    for i in range(9):
+        d.encode(f"t{i}")
+    p, q = 1, 2
+    # p-objects are {2, 4}; q-subjects are {5, 7}: disjoint on purpose
+    store = build_store(np.array([[0, p, 2], [3, p, 4],
+                                  [5, q, 6], [7, q, 8]], np.int32), d)
+    space = FeatureSpace(store)
+    state = hash_partition(space.feature_sizes(), 3, seed=2)
+    sharded = engine.ShardedStore(store, space, state)
+    x, y, z = var(0), var(1), var(2)
+    queries = [
+        # second pattern matches zero rows (0 is never a p-object) -> the
+        # probe side of the join is empty
+        Query(name="E0", patterns=((x, p, y), (y, p, 0))),
+        # both patterns match rows, but the shared variable's key sets are
+        # disjoint ({2,4} vs {5,7}) -> a zero-match probe
+        Query(name="E1", patterns=((x, p, y), (y, q, z))),
+        # empty from the first op
+        Query(name="E2", patterns=((x, p, 0), (y, q, z))),
+    ]
+    jx = qexec.JaxExecutor(pallas=True, probe_kernel=probe_kernel)
+    for q in queries:
+        plan = qplan.plan(q, sharded)
+        ref = qexec.NumpyExecutor().run(plan, sharded)
+        got = jx.run(plan, sharded)
+        _assert_equivalent(ref, got, q.name)
+        assert got[1].rows == 0
+
+
+def test_pallas_batch_equals_per_query_runs():
+    """jax-pallas run_batch over a window == independent run() per plan
+    (window dedup + kernel probe don't change results)."""
+    rng = np.random.default_rng(23)
+    store, space = _random_dataset(rng)
+    state = hash_partition(space.feature_sizes(), 4, seed=1)
+    sharded = engine.ShardedStore(store, space, state)
+    plans = [qplan.plan(_random_query(rng, store, name=f"P{i}"), sharded)
+             for i in range(4)]
+    ex = qexec.JaxExecutor(pallas=True, probe_kernel=True)
+    for plan, got in zip(plans, ex.run_batch(plans, sharded)):
+        _assert_equivalent(got, ex.run(plan, sharded), plan.query.name)

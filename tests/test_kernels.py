@@ -4,9 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import kernel as fk
 from repro.kernels.flash_attention import ops as fops
 from repro.kernels.flash_attention import ref as fref
+from repro.kernels.join import ops as jops
 from repro.kernels.mamba2_ssd import kernel as sk
 from repro.kernels.mamba2_ssd import ref as sref
 from repro.kernels.rwkv6_wkv import kernel as wk
@@ -129,3 +131,194 @@ def test_ssd_matches_scan(rng, bb, s, h, hd, n, c):
     y1, f1 = sk.ssd_pallas(x, b, cm, dt, a, d, s0, chunk=c, interpret=True)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
     np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# join (pack / sorted-probe / gather) + the shared dispatch policy
+# --------------------------------------------------------------------------- #
+
+MAXID = 2**31 - 1
+
+
+@pytest.mark.parametrize("nl,nr,k", [
+    (0, 17, 1),         # empty probe side
+    (23, 0, 2),         # empty build side
+    (5, 5, 1),          # below every block size
+    (300, 513, 2),      # straddles the probe block boundaries
+    (1, 1000, 2),       # single probe key against a large build
+])
+def test_join_hash_probe_matches_oracle(rng, nl, nr, k):
+    """(order, lo, counts) from the Pallas word-pair path == jitted oracle,
+    including empty sides and block-boundary straddles."""
+    lcs = [rng.integers(0, MAXID, nl).astype(np.int64) for _ in range(k)]
+    rcs = [rng.integers(0, MAXID, nr).astype(np.int64) for _ in range(k)]
+    n_common = min(nl, nr) // 2
+    for c in range(k):                       # force real matches + dup keys
+        rcs[c][:n_common] = lcs[c][:n_common]
+        if nr > 2:
+            rcs[c][-1] = rcs[c][0]
+    ref = jops.hash_probe_oracle(lcs, rcs)
+    got = jops.hash_probe(lcs, rcs, use_kernel=True, interpret=True)
+    for a, b, name in zip(ref, got, ("order", "lo", "counts")):
+        np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def test_join_probe_zero_matches(rng):
+    """Disjoint key ranges: every count is zero on both paths."""
+    lcs = [rng.integers(0, 1000, 64).astype(np.int64)]
+    rcs = [rng.integers(2000, 3000, 64).astype(np.int64)]
+    for kw in ({"use_kernel": False}, {"use_kernel": True, "interpret": True}):
+        _, lo, counts = jops.hash_probe(lcs, rcs, **kw)
+        assert counts.sum() == 0
+        assert (lo >= 0).all() and (lo <= 64).all()
+
+
+def test_join_pack_word_split_is_exact(rng):
+    """The kernel's (hi, lo) 32-bit word pair recombines to exactly the
+    oracle's base-2^31 int64 key, including the extreme ids."""
+    cols = rng.integers(0, MAXID, (300, 2)).astype(np.int64)
+    cols[0] = [0, 0]
+    cols[1] = [MAXID - 1, MAXID - 1]
+    cols[2] = [1, 0]
+    ref = jops.pack_keys(cols, use_kernel=False)
+    got = jops.pack_keys(cols, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(ref, got)
+    # one-column packing is the identity
+    one = cols[:, :1]
+    np.testing.assert_array_equal(
+        jops.pack_keys(one, use_kernel=True, interpret=True), one[:, 0])
+
+
+def test_join_probe_sorted_duplicates_and_misses(rng):
+    """searchsorted semantics: [lo, hi) spans full duplicate runs; missing
+    keys get empty ranges at the insertion point."""
+    build = np.sort(np.repeat(rng.integers(0, 2**40, 50), 3))     # dup runs
+    probe = np.concatenate([build[::5], rng.integers(2**41, 2**42, 20)])
+    ref = jops.probe_sorted(build, probe, use_kernel=False)
+    got = jops.probe_sorted(build, probe, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(ref[0], got[0])
+    np.testing.assert_array_equal(ref[1], got[1])
+    assert ((got[1] - got[0])[: len(build[::5])] == 3).all()
+    assert ((got[1] - got[0])[len(build[::5]):] == 0).all()
+
+
+def test_join_gather_rows_masks_out_of_range(rng):
+    vals = rng.integers(0, 10_000, 97)
+    idx = np.array([-5, -1, 0, 50, 96, 97, 10_000])
+    ref = jops.gather_rows(vals, idx, fill=-3, use_kernel=False)
+    got = jops.gather_rows(vals, idx, fill=-3, use_kernel=True,
+                           interpret=True)
+    np.testing.assert_array_equal(ref, got)
+    assert (ref[[0, 1, 5, 6]] == -3).all()
+
+
+def test_dispatch_policy_and_env_override(monkeypatch):
+    """The shared dispatch helper: explicit flags pass through; the auto
+    size threshold comes from REPRO_KERNEL_THRESHOLD; hot-path ops never
+    auto-select interpret mode on CPU."""
+    assert dispatch.resolve(True, False, 1) == (True, False)
+    assert dispatch.resolve(False, None, 10**9)[0] is False
+    on_tpu = dispatch.on_tpu()
+    # analysis policy (jaccard): big problems use the kernel even on CPU
+    assert dispatch.resolve(None, None, 10**6, hot_path=False)[0] is True
+    # hot-path policy (join): kernel only on TPU, oracle on CPU
+    assert dispatch.resolve(None, None, 10**6, hot_path=True)[0] is on_tpu
+    monkeypatch.setenv("REPRO_KERNEL_THRESHOLD", "7")
+    assert dispatch.kernel_threshold() == 7
+    assert dispatch.resolve(None, None, 8, hot_path=False)[0] is True
+    assert dispatch.resolve(None, None, 6, hot_path=False)[0] is on_tpu
+    assert dispatch.kernel_threshold(31) == 31
+
+
+def test_jaccard_dispatch_uses_shared_threshold(rng, monkeypatch):
+    """jaccard's old hard-coded >=256 floor now honors the shared policy:
+    a tiny problem forced over the threshold still matches the oracle."""
+    from repro.kernels.jaccard import ops as jacc
+    bm = jnp.asarray(rng.integers(0, 2**32, (12, 4), dtype=np.uint32))
+    monkeypatch.setenv("REPRO_KERNEL_THRESHOLD", "8")   # 12 >= 8 -> kernel
+    got = jacc.jaccard_distance(bm)
+    ref = jacc.jaccard_distance(bm, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_join_probe_tiers_agree(rng):
+    """All three probe tiers (host numpy / jitted oracle / Pallas kernels)
+    return identical (order, lo, counts); auto dispatch off-TPU serves the
+    host tier."""
+    lcs, rcs = ([rng.integers(0, MAXID, 200).astype(np.int64)],
+                [rng.integers(0, MAXID, 300).astype(np.int64)])
+    rcs[0][:100] = lcs[0][:100]
+    a = jops.hash_probe_numpy(lcs, rcs)
+    b = jops.hash_probe_oracle(lcs, rcs)
+    c = jops.hash_probe(lcs, rcs, use_kernel=True, interpret=True)
+    d = jops.hash_probe(lcs, rcs)                      # auto (host on CPU)
+    for got in (b, c, d):
+        for x, y in zip(a, got):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_join_auto_guards_respect_scaling_envelopes(rng, monkeypatch):
+    """Auto dispatch falls back past the kernels' scaling envelopes (the
+    O(nl*nr) probe compare budget, the gather VMEM-residency cap) while
+    forced use_kernel=True still pins the kernel path; results agree."""
+    from repro.kernels.join import ops as live_ops
+
+    lcs = [rng.integers(0, MAXID, 40).astype(np.int64)]
+    rcs = [rng.integers(0, MAXID, 50).astype(np.int64)]
+    rcs[0][:20] = lcs[0][:20]
+    monkeypatch.setenv("REPRO_KERNEL_THRESHOLD", "10")        # over the floor
+    monkeypatch.setenv("REPRO_JOIN_PROBE_WORK_CAP", "100")    # 40*50 > 100
+    monkeypatch.setenv("REPRO_JOIN_GATHER_RESIDENT_ROWS", "8")
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: True)     # auto -> kernel
+    # without the guards these autos would now try to compile the kernels
+    # for a backend that doesn't exist — the fallbacks must engage first
+    try:
+        ref = live_ops.hash_probe_numpy(lcs, rcs)
+        # capped auto path must not run the quadratic kernel; on this CPU
+        # "TPU" stub the fallback is the jitted oracle — same results
+        got = live_ops.hash_probe(lcs, rcs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, b)
+        vals = rng.integers(0, 100, 40)
+        idx = rng.integers(0, 40, 30)
+        np.testing.assert_array_equal(
+            live_ops.gather_rows(vals, idx, assume_inbounds=True),
+            vals[idx])
+    finally:
+        monkeypatch.undo()
+
+
+def test_join_gather_assume_inbounds_matches_masked(rng):
+    vals = rng.integers(0, 1000, 64)
+    idx = rng.integers(0, 64, 200)
+    a = jops.gather_rows(vals, idx)
+    b = jops.gather_rows(vals, idx, assume_inbounds=True)
+    c = jops.gather_rows(vals, idx, use_kernel=True, interpret=True,
+                         assume_inbounds=True)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+def test_join_kernel_contract_guards(rng):
+    """Public-op contract enforcement: the word-pair kernels reject packed
+    keys past the 2^62 envelope, and the gather kernel refuses (forced) or
+    avoids (auto) tables whose values would truncate through int32."""
+    big = np.array([1 << 62], np.int64)
+    ok = np.array([5, (1 << 62) - 1], np.int64)
+    with pytest.raises(ValueError, match="2\\^62"):
+        jops.probe_sorted(np.sort(ok), big, use_kernel=True, interpret=True)
+    lo, hi = jops.probe_sorted(np.sort(ok), ok[:1], use_kernel=True,
+                               interpret=True)
+    assert (lo[0], hi[0]) == (0, 1)
+
+    wide = np.array([1 << 40, 7], np.int64)
+    idx = np.array([0, 1])
+    with pytest.raises(ValueError, match="int32"):
+        jops.gather_rows(wide, idx, use_kernel=True, interpret=True)
+    # auto dispatch silently serves the host tier instead of truncating
+    np.testing.assert_array_equal(jops.gather_rows(wide, idx), wide)
+    # kernel-tier output keeps the table's dtype
+    small = rng.integers(0, 100, 16).astype(np.int16)
+    got = jops.gather_rows(small, idx, use_kernel=True, interpret=True)
+    assert got.dtype == small.dtype
+    np.testing.assert_array_equal(got, small[idx])
