@@ -1,0 +1,195 @@
+"""Read-replication benchmark: shipped bytes and window time vs replica
+budget.
+
+Every mode runs the identical LUBM workload-composition round (14 base
+queries partition the graph, EQ1..EQ10 arrive, the round is accepted and
+drained as a chunked ``MigrationSession``); the sweep variable is the
+``replica_budget`` — how many bytes of hot-feature read copies the round
+may pin onto the shards that read them remotely (``repro.replicate``).
+Budget 0 is the primary-only baseline.
+
+Per serving window we record the workload's total shipped bytes and the
+average modeled query time; during every drain, bindings are additionally
+checked byte-identical across all three executors (numpy / jax /
+jax-pallas) at every served epoch — replication must never change results,
+only where reads are served. ``results/exp_replication.csv`` holds the
+series; the summary asserts that a nonzero budget strictly reduces the
+steady-state bytes shipped per window vs budget 0.
+
+  PYTHONPATH=src python benchmarks/bench_replication.py            # LUBM(3)/8
+  PYTHONPATH=src python benchmarks/bench_replication.py --dry-run  # LUBM(1)/4
+  PYTHONPATH=src python -m benchmarks.run --only replication       # harness row
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.api import KGService
+from repro.graph import lubm
+from repro.query import exec as qexec
+
+SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "3"))
+SHARDS = int(os.environ.get("REPRO_BENCH_SHARDS", "8"))
+MIG_BUDGET = int(os.environ.get("REPRO_BENCH_MIG_BUDGET", str(1 << 20)))
+BUDGETS = (0, 1 << 18, 1 << 20, 1 << 22)
+CSV_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "exp_replication.csv")
+
+_EXECUTORS = ("numpy", "jax", "jax-pallas")
+
+
+def _canon(b):
+    if not b:
+        return []
+    keys = sorted(b)
+    return sorted(map(tuple, np.stack([b[k] for k in keys],
+                                      axis=1).tolist()))
+
+
+def _check_executors_identical(kg, window) -> None:
+    """Bindings (and comparable stats) byte-identical across all three
+    executors at the facade's current epoch."""
+    plans = [kg.plan(q) for q in window]
+    ref = qexec.NumpyExecutor().run_batch(plans, kg)
+    for name in _EXECUTORS[1:]:
+        got = qexec.get_executor(name).run_batch(plans, kg)
+        for q, (rb, rs), (gb, gs) in zip(window, ref, got):
+            assert _canon(rb) == _canon(gb), (q.name, name, kg.epoch)
+            for f in qexec.ExecStats.COMPARABLE:
+                assert getattr(rs, f) == getattr(gs, f), \
+                    (q.name, name, f, kg.epoch)
+
+
+def _window_row(kg, window, net, budget: int, w: int) -> dict:
+    """Serve one window on the numpy reference and record its federation."""
+    plans = [kg.plan(q) for q in window]
+    results = qexec.NumpyExecutor().run_batch(plans, kg)
+    stats = [st for _, st in results]
+    return dict(
+        budget=budget, window=w, epoch=kg.epoch,
+        bytes_shipped=sum(st.bytes_shipped for st in stats),
+        rows_shipped=sum(st.rows_shipped for st in stats),
+        avg_query_ms=float(np.mean([st.modeled_time(net)
+                                    for st in stats])) * 1e3,
+        replicated_features=len(kg.replicas.replicated()),
+        replica_bytes=kg.replicas.replica_bytes(kg.state.feature_sizes))
+
+
+def _serve_round(ds, shards: int, budget: int, mig_budget: int,
+                 check_epochs: bool) -> List[dict]:
+    """Bootstrap, fill the TM, run the accepted round, drain the session
+    chunk by chunk (recording a row — and cross-checking executors — at
+    every served epoch), then record the steady-state window."""
+    svc = KGService.from_dataset(ds, shards, migration_budget=mig_budget,
+                                 replica_budget=budget or None)
+    svc.bootstrap(ds.base_workload())
+    window = ds.extended_workload()
+    net = svc.net or qexec.NetworkModel()
+    svc.query_batch(window)                      # fill the TM (baseline obs)
+    report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert report.accepted, "benchmark needs an accepted round"
+    if budget:
+        assert report.replicas is not None and report.plan.replica_adds, \
+            "nonzero replica budget must promote at least one copy"
+
+    rows = []
+    w = 0
+    while True:                                  # every epoch incl. pre-drain
+        rows.append(_window_row(svc.kg, window, net, budget, w))
+        if check_epochs:
+            _check_executors_identical(svc.kg, window)
+        w += 1
+        if svc.step() is None:
+            break
+    rows.append(_window_row(svc.kg, window, net, budget, w))   # steady state
+    return rows
+
+
+def bench(scale: int, shards: int, budgets, mig_budget: int,
+          csv_path: Optional[str],
+          check_epochs: bool = True) -> List[Tuple[str, float, str]]:
+    ds = lubm.load(scale, 0)
+    budgets = sorted(set(budgets) | {0})     # the 0 baseline is the yardstick
+    if budgets == [0]:
+        raise SystemExit("need at least one nonzero --budgets entry to "
+                         "compare against the 0 baseline")
+    rows: List[dict] = []
+    steady = {}
+    for budget in budgets:
+        series = _serve_round(ds, shards, budget, mig_budget, check_epochs)
+        rows += series
+        steady[budget] = series[-1]
+
+    if csv_path:
+        cols = ["budget", "window", "epoch", "bytes_shipped", "rows_shipped",
+                "avg_query_ms", "replicated_features", "replica_bytes"]
+        with open(csv_path, "w") as fh:
+            fh.write(",".join(cols) + "\n")
+            for r in rows:
+                fh.write(",".join(f"{r[c]:.4f}" if isinstance(r[c], float)
+                                  else str(r[c]) for c in cols) + "\n")
+
+    base = steady[0]
+    out: List[Tuple[str, float, str]] = [
+        ("replication/bytes_per_window_budget0", float(base["bytes_shipped"]),
+         f"avg_query_us={base['avg_query_ms'] * 1e3:.0f}")]
+    for budget in budgets:
+        if budget == 0:
+            continue
+        r = steady[budget]
+        out.append((
+            f"replication/bytes_per_window_budget{budget}",
+            float(r["bytes_shipped"]),
+            f"reduction={1 - r['bytes_shipped'] / base['bytes_shipped']:.3f}"
+            f"_replicas={r['replicated_features']}"
+            f"_avg_query_us={r['avg_query_ms'] * 1e3:.0f}"))
+    best = min(steady[b]["bytes_shipped"] for b in budgets if b)
+    out.append(("replication/best_bytes_reduction_ratio",
+                base["bytes_shipped"] / max(best, 1),
+                "replicated_below_baseline="
+                + str(best < base["bytes_shipped"])))
+    return out
+
+
+def run() -> List[Tuple[str, float, str]]:
+    """benchmarks.run harness entry point (writes the CSV as a side effect).
+    Harness convention: values are bytes, except the final ratio row."""
+    return bench(SCALE, SHARDS, BUDGETS, MIG_BUDGET, CSV_PATH)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=SCALE)
+    ap.add_argument("--shards", type=int, default=SHARDS)
+    ap.add_argument("--budgets", default=",".join(map(str, BUDGETS)),
+                    help="comma-separated replica budgets (bytes); 0 = "
+                         "primary-only baseline")
+    ap.add_argument("--migration-budget", type=int, default=MIG_BUDGET)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small smoke (LUBM(1)/4, no CSV written)")
+    args = ap.parse_args()
+    if args.dry_run:
+        rows = bench(1, 4, (0, 256_000), 120_000, csv_path=None)
+    else:
+        budgets = tuple(int(b) for b in args.budgets.split(","))
+        rows = bench(args.scale, args.shards, budgets,
+                     args.migration_budget, CSV_PATH)
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    base = next(v for n, v, _ in rows if n.endswith("budget0"))
+    best = min(v for n, v, _ in rows
+               if "budget" in n and not n.endswith("budget0"))
+    assert best < base, (
+        f"a nonzero replica budget must strictly reduce bytes shipped per "
+        f"window ({best:.0f} vs baseline {base:.0f})")
+    print(f"OK: replicated window ships {best:.0f} B < primary-only "
+          f"{base:.0f} B ({1 - best / base:.1%} less)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ("clustering", "exp1", "exp2", "migration", "moe_placement",
-           "kernels", "train", "roofline")
+BENCHES = ("clustering", "exp1", "exp2", "migration", "replication",
+           "moe_placement", "kernels", "train", "roofline")
 
 
 def main() -> None:

@@ -37,7 +37,8 @@ print(f"\nQ9 -> {stats.rows} rows, {stats.distributed_joins} distributed "
 print("\nits QueryPlan IR:")
 print(kg.plan(q9).explain())
 print("\nfederated rewrite of Q9:")
-print(rewrite.federated_sparql(q9, svc.space, kg.state, ds.dictionary))
+print(rewrite.federated_sparql(q9, svc.space, kg.state, ds.dictionary,
+                               replicas=kg.replicas))
 
 # 4. the workload changes: 10 new queries arrive -> adapt incrementally
 new_queries = ds.workload([f"EQ{i}" for i in range(1, 11)])

@@ -31,6 +31,9 @@ def main() -> None:
     ap.add_argument("--migration-budget", type=int, default=None,
                     help="bytes of migration traffic applied per batch "
                          "(default: atomic commit inside the adapt round)")
+    ap.add_argument("--replica-budget", type=int, default=None,
+                    help="bytes of hot-feature read replicas the adaptation "
+                         "may pin onto remote readers' shards")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -40,7 +43,8 @@ def main() -> None:
         ds, args.shards,
         AWAPartitioner(AdaptConfig(adapt_threshold=1.10)),
         executor=args.executor,
-        migration_budget=args.migration_budget)
+        migration_budget=args.migration_budget,
+        replica_budget=args.replica_budget)
     base = ds.base_workload()
     svc.bootstrap(base)
     print(f"[{time.time()-t0:5.1f}s] serving {ds.store.n_triples} triples on "
@@ -68,7 +72,9 @@ def main() -> None:
             sess = svc.session          # was applied ahead of this batch
             marker = (f"  .. migrating {sess.applied}/{sess.n_chunks} chunks"
                       f" ({sess.bytes_applied / 1e6:.2f} MB)")
-        elif batch_i >= 1:
+        if batch_i >= 1:
+            # should_adapt() is False while a drain is in flight, so no
+            # caller-side special case is needed to avoid a mid-drain round
             report = svc.maybe_adapt()
             if report is not None and report.accepted:
                 adaptations += 1
@@ -80,7 +86,9 @@ def main() -> None:
     print(f"\nserved {args.batches * args.queries_per_batch} queries, "
           f"{adaptations} adaptation(s), final shards: "
           f"{svc.kg.shard_sizes()} "
-          f"({svc.kg.view_rebuilds} shard-view rebuilds total)")
+          f"({svc.kg.view_rebuilds} shard-view rebuilds, "
+          f"{len(svc.kg.replicas.replicated())} replicated features, "
+          f"{svc.kg.result_hits} result-cache hits)")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,57 @@ print(f"[ci] throttled migration: {sess.n_chunks} chunks drained over "
       f"final epoch {svc.kg.epoch}")
 EOF
 
+echo "== smoke: replicated serving (LUBM(1), replica_budget>0, all executors) =="
+python - <<'EOF'
+import numpy as np
+from repro.api import KGService
+from repro.graph import lubm
+from repro.query import exec as qexec
+
+def canon(b):
+    return sorted(map(tuple, np.stack(
+        [b[k] for k in sorted(b)], axis=1).tolist())) if b else []
+
+ds = lubm.load(1, seed=0)
+window = ds.extended_workload()
+
+svc0 = KGService.from_dataset(ds, n_shards=4)          # primary-only twin
+svc0.bootstrap(ds.base_workload())
+svc0.query_batch(window)
+rep0 = svc0.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+assert rep0.accepted
+bytes0 = sum(st.bytes_shipped for _, st in svc0.query_batch(window))
+
+svc = KGService.from_dataset(ds, n_shards=4, migration_budget=120_000,
+                             replica_budget=256_000)
+svc.bootstrap(ds.base_workload())
+svc.query_batch(window)
+report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+assert report.accepted and report.plan.replica_adds, \
+    "replica smoke needs an accepted round with promotions"
+while svc.session is not None:                         # drain while serving
+    assert not svc.should_adapt()                      # mid-drain guard
+    svc.query_batch(window)
+kg = svc.kg
+assert kg.replicas.has_replicas and kg.replicas == report.replicas
+plans = [kg.plan(q) for q in window]
+ref = qexec.NumpyExecutor().run_batch(plans, kg)
+for name in ("jax", "jax-pallas"):
+    got = qexec.get_executor(name).run_batch(plans, kg)
+    for q, (rb, rs), (gb, gs) in zip(window, ref, got):
+        assert canon(rb) == canon(gb), (q.name, name)
+        for f in qexec.ExecStats.COMPARABLE:
+            assert getattr(rs, f) == getattr(gs, f), (q.name, name, f)
+bytes1 = sum(st.bytes_shipped for st in (s for _, s in ref))
+assert bytes1 < bytes0, (bytes1, bytes0)
+print(f"[ci] replicated serving: {len(kg.replicas.replicated())} features "
+      f"replicated, {bytes1} B shipped/window < {bytes0} B primary-only, "
+      f"executors byte-identical")
+EOF
+
+echo "== smoke: benchmarks/bench_replication.py --dry-run =="
+python benchmarks/bench_replication.py --dry-run
+
 echo "== smoke: benchmarks/bench_migration.py --dry-run =="
 python benchmarks/bench_migration.py --dry-run
 

@@ -11,6 +11,8 @@ Everything callers need to serve a partitioned knowledge graph:
 * :class:`MigrationSession` — chunked online application of an accepted
   migration (``repro.migrate``), throttled by the service's
   ``migration_budget`` knob;
+* :class:`ReplicaMap` — workload-aware read replication of hot features
+  (``repro.replicate``), budgeted by the service's ``replica_budget`` knob;
 * executors: :class:`Executor` protocol with :class:`NumpyExecutor`
   (reference) and :class:`JaxExecutor` (batched; ``pallas=True`` — the
   ``executor="jax-pallas"`` knob — probes joins through the
@@ -25,6 +27,7 @@ from repro.api.partitioners import (AWAPartitioner, HashPartitioner,
 from repro.api.service import KGService
 from repro.migrate import MigrationSession
 from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
+from repro.replicate import ReplicaMap
 
 __all__ = [
     "AWAPartitioner",
@@ -36,5 +39,6 @@ __all__ = [
     "NumpyExecutor",
     "PartitionedKG",
     "Partitioner",
+    "ReplicaMap",
     "WawPartitioner",
 ]

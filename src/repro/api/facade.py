@@ -16,12 +16,22 @@ plan and cached separately — they survive commits, which is what makes
 candidate evaluation (``measure_candidate``) pure bincount re-accounting
 with no joins re-executed and no views touched.
 
+Beside the primary assignment the facade carries a
+``repro.replicate.ReplicaMap``: shard views additionally materialize any
+read copies pinned onto them, ``read_shard(ppn)`` resolves every triple's
+serving shard for a query (nearest replica: the PPN when a local copy
+exists, else the primary), and replica promotions/demotions arrive through
+the same ``MigrationChunk`` deltas as moves. An epoch-keyed result cache
+(``cached_result``/``store_result``) sits beside the plan cache so repeated
+``(query, epoch)`` pairs in hot TM windows skip re-execution entirely.
+
 The object is duck-compatible with ``repro.query.engine.ShardedStore``
 (``.space`` / ``.state`` / ``.shards`` / ``.store`` / ``.triple_shard``), so
 any ``Executor`` runs against it unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -33,6 +43,7 @@ from repro.graph.triples import TripleStore
 from repro.query import exec as qexec
 from repro.query import plan as qplan
 from repro.query.pattern import Query
+from repro.replicate import ReplicaMap
 
 
 class PartitionedKG:
@@ -40,7 +51,8 @@ class PartitionedKG:
 
     def __init__(self, store: TripleStore, space: FeatureSpace,
                  state: PartitionState, owners: np.ndarray | None = None,
-                 max_join_rows: int = qexec.DEFAULT_MAX_JOIN_ROWS):
+                 max_join_rows: int = qexec.DEFAULT_MAX_JOIN_ROWS,
+                 replicas: ReplicaMap | None = None):
         self.store = store
         self.space = space
         self.state = state
@@ -54,9 +66,9 @@ class PartitionedKG:
         self._views: List[Optional[TripleStore]] = [None] * state.n_shards
         self.view_rebuilds = 0         # telemetry: shard views (re)built
         # layout epoch: bumped whenever the served layout actually changes
-        # (a delta that moves features, or universe growth). Cached plans are
-        # valid for exactly one epoch; a mid-migration hybrid layout is a
-        # first-class epoch like any other.
+        # (a delta that moves features or replicas, or universe growth).
+        # Cached plans/results are valid for exactly one epoch; a
+        # mid-migration hybrid layout is a first-class epoch like any other.
         self.epoch = 0
         # query plans, cached per (query, store) until the layout changes;
         # keyed by query name (+ patterns, so a re-defined query under the
@@ -64,10 +76,26 @@ class PartitionedKG:
         self._plans: Dict[str, Tuple[tuple, qplan.QueryPlan]] = {}
         self.plan_builds = 0           # telemetry: plans built / cache hits
         self.plan_hits = 0
+        # epoch-keyed result cache beside the plan cache: bindings+stats of
+        # repeated (query, epoch) pairs in hot TM windows are served without
+        # re-execution; invalidated together with the plans on epoch bumps
+        self._results: Dict[str, Tuple[tuple, dict, qexec.ExecStats]] = {}
+        self.result_hits = 0
         # layout-invariant query profiles (derived from plans; survive
         # commits — join results don't depend on the layout)
         self._profiles: Dict[str, Tuple[tuple, qplan.QueryProfile]] = {}
+        # read replication (repro.replicate): which shards hold a copy of
+        # each feature; the primary assignment above stays authoritative
+        self.replicas = replicas or ReplicaMap.primary_only(state)
+        assert self.replicas.n_features == len(state.feature_to_shard)
+        self._replica_rows: List[np.ndarray] = [
+            np.empty(0, np.int64)] * state.n_shards
+        self._shard_rows: List[Optional[np.ndarray]] = [None] * state.n_shards
+        self._read_cache: Dict[int, np.ndarray] = {}   # ppn -> read shards
         self._rebuild_feature_index()
+        if self.replicas.has_replicas:
+            for s in range(state.n_shards):
+                self._refresh_replica_rows(s, state.feature_to_shard)
 
     # ------------------------------------------------------------------ #
     # executor compatibility
@@ -84,16 +112,68 @@ class PartitionedKG:
     @property
     def shards(self) -> List[TripleStore]:
         """Materialized per-shard views (lazily built, cached until a delta
-        touches the shard)."""
+        touches the shard). A shard's view holds its primary slice plus any
+        replica copies pinned onto it (``self.replicas``)."""
         for s in range(self.state.n_shards):
             if self._views[s] is None:
                 self._views[s] = TripleStore(
-                    self.store.triples[self._rows[s]], self.store.dictionary)
+                    self.store.triples[self.shard_rows(s)],
+                    self.store.dictionary)
                 self.view_rebuilds += 1
         return list(self._views)
 
+    def shard_rows(self, s: int) -> np.ndarray:
+        """Global triple rows materialized on shard ``s`` — primary rows
+        first, then replica-copy rows. ``shards[s]`` view row ``i`` is
+        global row ``shard_rows(s)[i]``."""
+        if self._shard_rows[s] is None:
+            rep = self._replica_rows[s]
+            self._shard_rows[s] = (self._rows[s] if len(rep) == 0 else
+                                   np.concatenate([self._rows[s], rep]))
+        return self._shard_rows[s]
+
     def shard_sizes(self) -> List[int]:
+        """Primary (owned) triples per shard — replica copies not counted;
+        this is the balance quantity the partitioner optimizes."""
         return [len(r) for r in self._rows]
+
+    # ------------------------------------------------------------------ #
+    # replica-aware read layout
+    # ------------------------------------------------------------------ #
+    def read_shard(self, ppn: int) -> np.ndarray:
+        """Per-triple serving shard for a query homed at ``ppn``: the PPN
+        itself when the triple's owner feature holds a copy there (local
+        read — nothing shipped), else the primary. Cached per PPN for the
+        current epoch."""
+        cached = self._read_cache.get(ppn)
+        if cached is None:
+            on = self.replicas.on_shard(ppn)
+            cached = np.where(on[self.owners], np.int32(ppn),
+                              self._triple_shard)
+            self._read_cache[ppn] = cached
+        return cached
+
+    def _refresh_replica_rows(self, s: int,
+                              feature_to_shard: np.ndarray) -> bool:
+        """Recompute shard ``s``'s replica-copy rows (owner features holding
+        a copy on ``s`` whose primary is elsewhere). Returns True when the
+        set changed (the shard's view must be re-materialized)."""
+        on = self.replicas.on_shard(s)
+        on[feature_to_shard == s] = False
+        rows = self._rows_of(np.flatnonzero(on))
+        changed = not np.array_equal(rows, self._replica_rows[s])
+        self._replica_rows[s] = rows
+        if changed:
+            self._views[s] = None
+            self._shard_rows[s] = None
+        return changed
+
+    def _invalidate_caches(self) -> None:
+        """Epoch-scoped caches: plans, results and read layouts are valid
+        for exactly one served layout."""
+        self._plans.clear()
+        self._results.clear()
+        self._read_cache.clear()
 
     # ------------------------------------------------------------------ #
     # owner-feature row index (CSR over triples grouped by owner feature)
@@ -126,45 +206,88 @@ class PartitionedKG:
         self.state, self.owners = migration.extend_for_space(self.state,
                                                              self.space)
         self.epoch += 1
-        self._plans.clear()
+        self._invalidate_caches()
         self._rebuild_feature_index()
+        # new (split) PO features start primary-only; a split parent's
+        # replica copies keep only the rows the parent still owns
+        self.replicas.extend(self.state.feature_to_shard)
+        if self.replicas.has_replicas:
+            for s in range(self.state.n_shards):
+                self._refresh_replica_rows(s, self.state.feature_to_shard)
 
     # ------------------------------------------------------------------ #
     # incremental deltas
     # ------------------------------------------------------------------ #
-    def _apply(self, new_state: PartitionState) -> None:
+    def _apply(self, new_state: PartitionState,
+               replica_adds: Sequence[Tuple[int, int, int]] = (),
+               replica_drops: Sequence[Tuple[int, int]] = ()) -> None:
         assert len(new_state.feature_to_shard) == \
             len(self.state.feature_to_shard), \
             "sync_universe() before applying a delta over a grown universe"
         changed = np.flatnonzero(
             self.state.feature_to_shard != new_state.feature_to_shard)
-        if len(changed) == 0:              # no-op delta: the served layout is
-            self.state = new_state         # unchanged — keep plans/views/epoch
-            return
+        # replica ops first (drops, then — after the moves below — adds),
+        # tracking which shards' copy sets actually change
+        rep_touched: set = set()
+        for f, s in replica_drops:
+            if int(new_state.feature_to_shard[f]) != s \
+                    and self.replicas.has(f, s):
+                self.replicas.remove(f, s)
+                rep_touched.add(s)
+        # an add is effective unless the target IS the feature's new primary
+        # or will still hold a copy after the moves below run: a retained
+        # copy at a moving feature's OLD primary is effective (the move
+        # clears that bit), an add onto any other existing copy is not.
+        # One predicate drives both no-op detection and application.
+        moving = set(changed.tolist())
+
+        def _add_effective(f: int, dst: int) -> bool:
+            if int(new_state.feature_to_shard[f]) == dst:
+                return False
+            if f in moving and dst == int(self.state.feature_to_shard[f]):
+                return True
+            return not self.replicas.has(f, dst)
+
+        effective_adds = [(f, dst) for f, _src, dst in replica_adds
+                          if _add_effective(f, dst)]
+        if len(changed) == 0 and not rep_touched and not effective_adds:
+            self.state = new_state         # no-op delta: the served layout is
+            return                         # unchanged — keep plans/views/epoch
         rows = self._rows_of(changed)
         old_shards = self._triple_shard[rows]
         new_shards = new_state.feature_to_shard[self.owners[rows]] \
             .astype(np.int32)
         touched = (np.unique(np.concatenate([old_shards, new_shards])).tolist()
                    if len(rows) else [])
+        for f in changed.tolist():         # the move carries the primary copy
+            self.replicas.move_primary(
+                f, int(self.state.feature_to_shard[f]),
+                int(new_state.feature_to_shard[f]))
+        for f, dst in effective_adds:      # after the moves, so a retained
+            self.replicas.add(f, dst)      # old-primary copy sticks
+            rep_touched.add(dst)
         self._triple_shard[rows] = new_shards
-        for s in touched:
-            self._rows[s] = np.flatnonzero(self._triple_shard == s)
-            self._views[s] = None          # re-indexed lazily on next access
+        for s in set(touched) | rep_touched:
+            if s in touched:
+                self._rows[s] = np.flatnonzero(self._triple_shard == s)
+                self._views[s] = None      # re-indexed lazily on next access
+                self._shard_rows[s] = None
+            self._refresh_replica_rows(s, new_state.feature_to_shard)
         self.state = new_state
         self.epoch += 1
-        self._plans.clear()                # PPN/federation annotations changed
+        self._invalidate_caches()          # PPN/federation annotations changed
 
     def apply_chunk(self, chunk: migration.MigrationChunk) -> None:
         """Apply one ``MigrationChunk`` of an in-flight migration as an
         incremental delta. The resulting partially-migrated layout is served
-        as-is (a new epoch): only shards touched by the chunk's moves are
-        re-indexed, and cached plans are invalidated because the PPN vote and
-        federation annotations may have shifted."""
+        as-is (a new epoch): only shards touched by the chunk's moves and
+        replica ops are re-indexed, and cached plans/results are invalidated
+        because the PPN vote and federation annotations may have shifted."""
         state = self.state.copy()
         for f, _src, dst in chunk.moves:
             state.feature_to_shard[f] = dst
-        self._apply(state)
+        self._apply(state, getattr(chunk, "replica_adds", ()),
+                    getattr(chunk, "replica_drops", ()))
 
     # ------------------------------------------------------------------ #
     # plans, profiles, candidate pricing
@@ -193,19 +316,47 @@ class PartitionedKG:
             self._profiles[q.name] = entry
         return entry[1]
 
+    def cached_result(self, q: Query,
+                      ) -> Optional[Tuple[dict, qexec.ExecStats]]:
+        """Bindings+stats of ``q`` if already executed at the current epoch
+        (bindings are layout-invariant; stats are valid per epoch). None on
+        a miss — the caller executes and ``store_result``s. Binding columns
+        and the stats are copied both into and out of the cache, so callers
+        mutating their result (or the original executor objects) can never
+        corrupt a later hit — a memcpy per column, still far below a
+        re-execution."""
+        entry = self._results.get(q.name)
+        if entry is not None and entry[0] == tuple(q.patterns):
+            self.result_hits += 1
+            return ({v: c.copy() for v, c in entry[1].items()},
+                    dataclasses.replace(entry[2]))
+        return None
+
+    def store_result(self, q: Query, bindings: dict,
+                     stats: qexec.ExecStats) -> None:
+        self._results[q.name] = (tuple(q.patterns),
+                                 {v: c.copy() for v, c in bindings.items()},
+                                 dataclasses.replace(stats))
+
     def measure_candidate(self, cand: PartitionState,
-                          queries: Sequence[Query], net=None) -> float:
+                          queries: Sequence[Query], net=None,
+                          replicas=None) -> float:
         """Average modeled workload time under ``cand`` — pure federation
         re-accounting over cached query profiles. No joins are re-executed,
         no shard view is touched: only the candidate's triple->shard map is
-        derived (one gather) and each profiled pattern re-priced."""
+        derived (one gather) and each profiled pattern re-priced. With a
+        candidate ``ReplicaMap``, shipping is charged against the nearest
+        replica (``stats_from_profile``) — how replica-served savings enter
+        the adaptation guard's benefit side."""
         self.sync_universe()
         triple_shard = cand.feature_to_shard[self.owners].astype(np.int32)
         net = net or qexec.NetworkModel()
         num = den = 0.0
         for q in queries:
             st = qplan.stats_from_profile(q, self.profile(q), self.space,
-                                          cand, triple_shard)
+                                          cand, triple_shard,
+                                          replicas=replicas,
+                                          owners=self.owners)
             num += st.modeled_time(net) * q.frequency
             den += q.frequency
         return num / max(den, 1e-12)
@@ -226,4 +377,5 @@ class PartitionedKG:
         return (f"PartitionedKG(n_triples={self.store.n_triples}, "
                 f"n_shards={self.n_shards}, "
                 f"n_features={len(self.state.feature_to_shard)}, "
+                f"n_replicated={len(self.replicas.replicated())}, "
                 f"epoch={self.epoch})")

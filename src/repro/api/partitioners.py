@@ -103,29 +103,36 @@ class AWAPartitioner(WawPartitioner):
         (no joins re-executed, no views touched); the controller's
         migration-cost-aware guard then accepts the winner only if the
         modeled savings amortize the plan's traffic over the expected TM
-        window. Nothing is committed here: the accepted plan comes back as a
-        session whose chunks (hottest workload features first, each at most
-        ``bytes_budget`` of traffic; ``None`` = one chunk) the caller drains
-        while serving. A rejected round returns an already-drained noop
-        session. ``measure`` overrides the objective (``None`` = modeled
-        workload-average time from the profiles)."""
+        window. The round is replica-aware end to end: the live facade's
+        ``ReplicaMap`` feeds the controller, which promotes hot features /
+        demotes cold replicas under ``config.replica_budget`` and prices
+        both the copy traffic (cost) and the nearest-replica shipping
+        savings (benefit). Nothing is committed here: the accepted plan
+        comes back as a session whose chunks (hottest workload features
+        first, each at most ``bytes_budget`` of traffic; ``None`` = one
+        chunk) the caller drains while serving. A rejected round returns an
+        already-drained noop session. ``measure`` overrides the objective
+        (``None`` = modeled workload-average time from the profiles)."""
         assert self.controller is not None, "partition() first"
         ctrl = self.controller
         net_model = net or qexec.NetworkModel()
         if measure is None:
-            def measure(cand: PartitionState) -> float:
+            def measure(cand: PartitionState, replicas=None) -> float:
                 return kg.measure_candidate(
-                    cand, list(ctrl.workload.values()), net)
+                    cand, list(ctrl.workload.values()), net,
+                    replicas=replicas)
         state, report = ctrl.adapt(list(new_queries), measure=measure,
-                                   net=net_model)
+                                   net=net_model, replicas=kg.replicas)
         kg.sync_universe()     # align the served universe with the round's
-        if not (report.accepted and report.plan.n_moves):
+        if not (report.accepted
+                and (report.plan.n_moves or report.plan.n_replica_ops)):
             return MigrationSession.noop(kg), report
-        heat = migration.feature_heat(ctrl.space,
-                                      list(ctrl.workload.values()))
+        heat = report.heat if report.heat is not None else \
+            migration.feature_heat(ctrl.space, list(ctrl.workload.values()))
         # the session's delta is derived from the *live* facade state (which
         # may be a mid-drain hybrid), so draining always lands exactly on the
         # accepted target — report.plan stays the guard's priced plan
         session = MigrationSession(kg, state, bytes_budget=bytes_budget,
-                                   priority=heat, net=net_model)
+                                   priority=heat, net=net_model,
+                                   target_replicas=report.replicas)
         return session, report

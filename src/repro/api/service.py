@@ -23,6 +23,8 @@ executes in one dispatched batch). An ``Executor`` instance plugs in too.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -48,7 +50,13 @@ class KGService:
     round into a pending :class:`MigrationSession` whose chunks are applied
     one per ``query_batch`` window (or explicitly via ``step()``/``drain()``),
     so adaptation becomes a background process with bounded per-window cost
-    instead of a latency cliff."""
+    instead of a latency cliff.
+
+    ``replica_budget`` (bytes) enables workload-aware read replication
+    (``repro.replicate``): each adaptation round promotes the hottest
+    features onto the shards that read them remotely — up to this many
+    bytes of extra copies — and demotes replicas that fell cold. Copy
+    traffic drains through the same migration sessions as moves."""
 
     def __init__(self, store: TripleStore, n_shards: int,
                  partitioner: Partitioner | None = None, *,
@@ -56,7 +64,8 @@ class KGService:
                  config: AdaptConfig | None = None,
                  executor: "str | qexec.Executor | None" = None,
                  net: qexec.NetworkModel | None = None,
-                 migration_budget: int | None = None):
+                 migration_budget: int | None = None,
+                 replica_budget: int | None = None):
         self.store = store
         self.n_shards = n_shards
         self.partitioner = partitioner or AWAPartitioner(config)
@@ -64,6 +73,19 @@ class KGService:
         self.executor = qexec.get_executor(executor)
         self.net = net
         self.migration_budget = migration_budget
+        self.replica_budget = replica_budget
+        if replica_budget is not None:
+            # thread the knob into the adaptive strategy's config — on a
+            # copy, never mutating a caller-owned AdaptConfig in place
+            if not hasattr(self.partitioner, "adapt"):
+                warnings.warn(
+                    f"replica_budget has no effect: partitioner "
+                    f"'{self.partitioner.name}' never runs an adaptation "
+                    "round (replicas are promoted per round)", stacklevel=2)
+            else:
+                cfg = self.partitioner.config or AdaptConfig()
+                self.partitioner.config = dataclasses.replace(
+                    cfg, replica_budget=int(replica_budget))
         self.kg: Optional[PartitionedKG] = None
         self.session: Optional[MigrationSession] = None   # in-flight drain
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
@@ -99,9 +121,15 @@ class KGService:
     # ------------------------------------------------------------------ #
     def query(self, q: Query) -> Tuple[Dict[int, np.ndarray],
                                        qexec.ExecStats]:
-        """Execute one federated query and record its runtime."""
+        """Execute one federated query and record its runtime. A repeat of
+        the same query at the same layout epoch is served from the facade's
+        result cache without re-execution."""
         assert self.kg is not None, "bootstrap() first"
-        bindings, stats = self.executor.run(self.kg.plan(q), self.kg)
+        hit = self.kg.cached_result(q)
+        if hit is None:
+            hit = self.executor.run(self.kg.plan(q), self.kg)
+            self.kg.store_result(q, *hit)
+        bindings, stats = hit
         self.observe(q, stats.modeled_time(self.net))
         return bindings, stats
 
@@ -109,6 +137,8 @@ class KGService:
                     ) -> List[Tuple[Dict[int, np.ndarray], qexec.ExecStats]]:
         """Execute a whole window of queries as one backend batch (a single
         dispatched batch on the jax executor) and record every runtime.
+        Queries already executed at the current layout epoch are served from
+        the result cache; only the misses reach the backend.
 
         When a throttled migration is in flight, one chunk is applied ahead
         of the window — the window pays a bounded migration stall (at most
@@ -116,8 +146,13 @@ class KGService:
         hybrid layout, so the hottest features arrive earliest."""
         assert self.kg is not None, "bootstrap() first"
         self.step()
-        plans = [self.kg.plan(q) for q in queries]
-        results = self.executor.run_batch(plans, self.kg)
+        results = [self.kg.cached_result(q) for q in queries]
+        miss = [i for i, r in enumerate(results) if r is None]
+        if miss:
+            plans = [self.kg.plan(queries[i]) for i in miss]
+            for i, res in zip(miss, self.executor.run_batch(plans, self.kg)):
+                results[i] = res
+                self.kg.store_result(queries[i], *res)
         for q, (_, stats) in zip(queries, results):
             self.observe(q, stats.modeled_time(self.net))
         return results
@@ -152,6 +187,12 @@ class KGService:
     # adaptation
     # ------------------------------------------------------------------ #
     def should_adapt(self) -> bool:
+        """Adaptation trigger — False while a migration drain is in flight:
+        the TM is observing transient hybrid-layout times, and a fresh round
+        would finish the drain atomically, re-introducing the stop-the-world
+        stall the ``migration_budget`` knob exists to prevent."""
+        if self.session is not None:
+            return False
         ctrl = self.controller
         return ctrl is not None and ctrl.should_adapt()
 

@@ -17,6 +17,7 @@ Pipeline per adaptation round (Sec. III.B, Fig. 5):
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,6 +51,12 @@ class AdaptConfig:
     # the migration traffic. None = estimate from the TM (observed execution
     # count, floored at the workload's total frequency).
     amortize_window: Optional[int] = None
+    # read-replication budget (bytes of non-primary copies, repro.replicate):
+    # each round promotes the hottest workload features onto the PPNs that
+    # read them remotely and demotes replicas that fell cold, greedy under
+    # this cap. Copy traffic counts toward the guard's migration cost;
+    # replica-served shipping savings count toward its benefit. 0 = off.
+    replica_budget: int = 0
 
 
 @dataclasses.dataclass
@@ -64,6 +71,29 @@ class AdaptReport:
     chosen_cut: float = 0.0
     migration_s: float = 0.0         # modeled traffic time of the plan
     amortize_window: int = 0         # TM window the guard amortized over
+    replicas: Optional[object] = None  # accepted target ReplicaMap (or None)
+    replica_bytes: int = 0           # non-primary copy bytes under the target
+    # per-feature workload heat of this round (repr-suppressed array) — the
+    # chunk priority, computed once here and reused by the session builder
+    heat: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+
+
+def _accepts_replicas(measure: Callable) -> bool:
+    """Can ``measure`` price a replicated candidate — i.e. accept a
+    keyword ``replicas`` argument? Custom objectives without one predate
+    replication and must keep working (the round then prices primary-only
+    and leaves the served replicas untouched). Detection is by parameter
+    *name* and the argument is always passed by keyword, so an unrelated
+    second positional parameter never receives a ReplicaMap."""
+    try:
+        params = inspect.signature(measure).parameters
+    except (TypeError, ValueError):       # builtins/C callables: assume yes
+        return True
+    if any(p.kind is p.VAR_KEYWORD for p in params.values()):
+        return True
+    p = params.get("replicas")
+    return p is not None and p.kind in (p.POSITIONAL_OR_KEYWORD,
+                                        p.KEYWORD_ONLY)
 
 
 class AWAPartController:
@@ -226,7 +256,7 @@ class AWAPartController:
 
     def adapt(self, new_queries: Sequence[Query],
               measure: Optional[Callable[[PartitionState], float]] = None,
-              net=None) -> Tuple[PartitionState, AdaptReport]:
+              net=None, replicas=None) -> Tuple[PartitionState, AdaptReport]:
         """One Fig.-5 adaptation round. ``measure`` returns the average
         workload execution time under a candidate partition (used for the
         accept/revert guard); if None, the frequency-weighted distributed
@@ -237,19 +267,43 @@ class AWAPartController:
         destination layout is accepted only if the modeled per-query savings,
         amortized over the expected TM window (``_expected_window``), pay for
         shipping ``plan.bytes`` of migration traffic — pricing the *journey*,
-        not just the destination."""
+        not just the destination.
+
+        ``replicas`` (the live ``repro.replicate.ReplicaMap``) switches the
+        round replica-aware: the winning layout gets a fresh replica proposal
+        (hottest features promoted under ``config.replica_budget``, cold
+        replicas demoted), ``measure`` is called as ``measure(cand, rmap)``
+        to price the replicated destination, and the plan's bytes include
+        the copy traffic — so the guard weighs replica cost against
+        replica-served savings. The accepted target map is returned as
+        ``report.replicas``."""
         assert self.state is not None, "call initial_partition first"
         cfg = self.config
+        if replicas is not None and measure is not None \
+                and not _accepts_replicas(measure):
+            replicas = None       # replica-unaware custom objective: price
+            #                       primary-only, leave served copies alone
         for q in new_queries:                        # line 1
             self.workload[q.name] = q
         queries = list(self.workload.values())
 
-        t_base = measure(self.state) if measure else None   # line 2
+        # line 2 — T_base under the layout actually being served (including
+        # its current read replicas, if any)
+        t_base = None
+        if measure:
+            t_base = (measure(self.state, replicas=replicas)
+                      if replicas is not None and replicas.has_replicas
+                      else measure(self.state))
         self._baseline_avg = t_base if t_base is not None else self._baseline_avg
 
         # line 3: track new PO features; ownership split grows the universe
         self.space.track_workload(queries)
         cur, _ = migration.extend_for_space(self.state, self.space)
+        if replicas is not None:
+            # plan over the grown universe: new (split) PO features start
+            # primary-only on their inherited shard, like the facade's view
+            replicas = replicas.copy()
+            replicas.extend(cur.feature_to_shard)
 
         # lines 4-23, once per candidate cut; the measured objective picks
         # the winning candidate (beyond-paper extension of the line-24 guard)
@@ -262,18 +316,37 @@ class AWAPartController:
                 best = (obj, cand, stats, cut, ncl)
         obj_new, new, stats, chosen_cut, n_clusters = best
 
+        # per-feature workload heat over the grown universe: the replica
+        # promotion order here AND the session's chunk priority (via the
+        # report) — computed exactly once per round
+        heat = migration.feature_heat(self.space, queries)
+
+        # replica promotion/demotion for the winning layout: hottest
+        # workload features onto their remote readers' PPNs, greedy under
+        # the byte budget; features not re-proposed are demoted
+        rmap_new = None
+        if replicas is not None:
+            from repro import replicate
+            rmap_new = replicate.propose_replicas(
+                self.space, new, queries,
+                int(getattr(cfg, "replica_budget", 0) or 0), heat=heat)
+
         dj_before = distributed_joins(stats, cur)
         dj_after = distributed_joins(stats, new)
-        mplan = migration.plan(cur, new)
+        mplan = migration.plan(cur, new, replicas, rmap_new)
 
         t_new = obj_new if measure else None                 # line 24
+        if measure and rmap_new is not None and rmap_new.has_replicas:
+            # replica-served savings enter the benefit side of the guard
+            t_new = measure(new, replicas=rmap_new)
         migration_s = 0.0
         window = 0
         if measure:
             gain = t_base - t_new
-            if net is not None and mplan.n_moves:
+            if net is not None and (mplan.n_moves or mplan.n_replica_ops):
                 # migration-cost-aware guard: the destination must amortize
-                # the cost of getting there over the expected TM window
+                # the cost of getting there (moves AND replica copies) over
+                # the expected TM window
                 migration_s = migration.migration_seconds(mplan, net)
                 window = self._expected_window(queries)
                 # window == 0 means nothing to amortize over: savings can
@@ -288,8 +361,12 @@ class AWAPartController:
         else:
             self.state = cur
             mplan = migration.MigrationPlan([], 0, 0)
+            rmap_new = None                # served replicas stay as they are
         return self.state, AdaptReport(
             accepted=accepted, plan=mplan, dj_before=dj_before,
             dj_after=dj_after, t_base=t_base, t_new=t_new,
             n_clusters=n_clusters, chosen_cut=chosen_cut,
-            migration_s=migration_s, amortize_window=window)
+            migration_s=migration_s, amortize_window=window,
+            replicas=rmap_new, heat=heat,
+            replica_bytes=(rmap_new.replica_bytes(new.feature_sizes)
+                           if rmap_new is not None else 0))

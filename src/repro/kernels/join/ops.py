@@ -148,14 +148,21 @@ def probe_sorted(build_sorted: np.ndarray, probe: np.ndarray, *,
 def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
                 use_kernel: bool | None = None,
                 interpret: bool | None = None,
-                assume_inbounds: bool = False) -> np.ndarray:
+                assume_inbounds: bool = False,
+                bounded_by_len: bool = False) -> np.ndarray:
     """Masked gather ``values[idx]`` (out-of-range -> ``fill``); the host
     gather is its own oracle — a one-op kernel needs no jnp round trip.
 
     ``assume_inbounds=True`` lets a caller that guarantees valid indices
     (the executor's expansion positions are constructed in range) skip the
     host tier's masking passes; the kernel tier masks either way (the mask
-    is inert for valid indices)."""
+    is inert for valid indices).
+
+    ``bounded_by_len=True`` declares every value nonnegative and bounded by
+    ``len(values)`` — true of permutation tables like a build-side sort
+    order — so the int32-envelope check on the kernel tier is the O(1)
+    proof ``len(values) <= 2^31`` instead of a min/max scan over the whole
+    int64 table (two host passes per join on the TPU path)."""
     values = np.asarray(values)
     idx = np.asarray(idx)
     auto = use_kernel is None
@@ -163,13 +170,18 @@ def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
                                              idx.shape[0], hot_path=True)
     if use_kernel and auto and values.shape[0] > _gather_resident_rows():
         use_kernel = False             # table would not fit one VMEM panel
-    if use_kernel and values.size and (
-            values.min() < -(1 << 31) or values.max() >= 1 << 31):
+    if use_kernel and values.size:
         # the kernel carries values as int32 words; out-of-envelope tables
-        # would silently truncate, so auto falls back and forced raises
-        if not auto:
-            raise ValueError("gather kernel requires int32-range values")
-        use_kernel = False
+        # would silently truncate, so auto falls back and forced raises.
+        # A length-bounded table (e.g. a sort permutation: values are
+        # indices into itself) is proven in-envelope in O(1).
+        in_envelope = (values.shape[0] <= (1 << 31) if bounded_by_len
+                       else (values.min() >= -(1 << 31)
+                             and values.max() < 1 << 31))
+        if not in_envelope:
+            if not auto:
+                raise ValueError("gather kernel requires int32-range values")
+            use_kernel = False
     if not use_kernel:
         if assume_inbounds:
             return values[idx]

@@ -36,13 +36,15 @@ PARTITIONERS = {"hash": HashPartitioner, "wawpart": WawPartitioner,
 def build_system(universities: int, shards: int, seed: int = 0,
                  config: AdaptConfig | None = None,
                  partitioner: str = "awapart", executor: str = "numpy",
-                 migration_budget: int | None = None):
+                 migration_budget: int | None = None,
+                 replica_budget: int | None = None):
     """Load LUBM and assemble the service facade (no partition yet)."""
     ds = lubm.load(universities, seed)
     part = (HashPartitioner() if partitioner == "hash"
             else PARTITIONERS[partitioner](config))
     svc = KGService.from_dataset(ds, shards, part, executor=executor,
-                                 migration_budget=migration_budget)
+                                 migration_budget=migration_budget,
+                                 replica_budget=replica_budget)
     return ds, svc
 
 
@@ -157,6 +159,10 @@ def main() -> None:
     ap.add_argument("--migration-budget", type=int, default=None,
                     help="bytes of migration traffic per serving window "
                          "(default: atomic commit)")
+    ap.add_argument("--replica-budget", type=int, default=None,
+                    help="bytes of read-replica copies the adaptation may "
+                         "pin onto remote readers' shards (default: no "
+                         "replication)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
@@ -165,7 +171,8 @@ def main() -> None:
     ds, svc = build_system(args.universities, args.shards,
                            partitioner=args.partitioner,
                            executor=args.executor,
-                           migration_budget=args.migration_budget)
+                           migration_budget=args.migration_budget,
+                           replica_budget=args.replica_budget)
     print(f"loaded LUBM({args.universities}): {ds.store.n_triples} triples "
           f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
           f"{args.shards} shards, strategy={svc.partitioner.name}, "
@@ -178,7 +185,8 @@ def main() -> None:
         state = out["state"]
         q = ds.queries["Q9"]
         print("\nFederated rewrite of Q9 under the adapted partition:")
-        print(rewrite.federated_sparql(q, svc.space, state, ds.dictionary))
+        print(rewrite.federated_sparql(q, svc.space, state, ds.dictionary,
+                                       replicas=svc.kg.replicas))
 
 
 if __name__ == "__main__":

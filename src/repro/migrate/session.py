@@ -55,17 +55,26 @@ class MigrationSession:
         migrate in the earliest chunks.
     net : NetworkModel-like, optional
         Used by ``step_seconds``/``total_seconds`` to price chunk traffic.
+    target_replicas : ReplicaMap, optional
+        The accepted destination replica layout (``repro.replicate``).
+        Promotions/demotions ride the same chunks as moves — copy traffic
+        drains under the same budget — and after ``drain()`` the facade's
+        ``ReplicaMap`` equals this exactly.
     """
 
     def __init__(self, kg, target: PartitionState,
                  plan: Optional[migration.MigrationPlan] = None, *,
                  bytes_budget: Optional[int] = None,
                  priority: Optional[np.ndarray] = None,
-                 net=None):
+                 net=None, target_replicas=None):
         self.kg = kg
         self.target = target
+        self.target_replicas = target_replicas
         self.plan = plan if plan is not None \
-            else migration.plan(kg.state, target)
+            else migration.plan(kg.state, target,
+                                getattr(kg, "replicas", None)
+                                if target_replicas is not None else None,
+                                target_replicas)
         self.net = net
         budget = self.plan.bytes if bytes_budget is None else bytes_budget
         self.chunks: List[migration.MigrationChunk] = migration.chunk_plan(
@@ -115,6 +124,9 @@ class MigrationSession:
             assert np.array_equal(self.kg.state.feature_to_shard,
                                   self.target.feature_to_shard), \
                 "drained session must land exactly on the target layout"
+            assert self.target_replicas is None or np.array_equal(
+                self.kg.replicas.masks, self.target_replicas.masks), \
+                "drained session must land exactly on the target replicas"
         return chunk
 
     def drain(self) -> int:

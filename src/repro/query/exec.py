@@ -210,6 +210,14 @@ def _table_len(table: Optional[Bindings]) -> int:
 # numpy backend — reference semantics
 # --------------------------------------------------------------------------- #
 
+def _has_replicated_layout(kg) -> bool:
+    """Does ``kg`` carry a ReplicaMap with actual read copies? (ShardedStore
+    and primary-only facades answer False — the replica-free fast paths
+    stay byte-identical to the pre-replication executors.)"""
+    replicas = getattr(kg, "replicas", None)
+    return replicas is not None and replicas.has_replicas
+
+
 class NumpyExecutor:
     """Per-shard matching + numpy joins; the reference backend."""
 
@@ -222,13 +230,30 @@ class NumpyExecutor:
         stats = ExecStats()
         t0 = time.perf_counter()
         shards = kg.shards
+        # replicated layout: shard views hold read copies, so every triple
+        # is scanned exactly once at its *read* shard for this query — the
+        # PPN when the owner feature has a local copy there, else the
+        # primary. The match set (hence every binding) is unchanged; only
+        # which shard serves each row — the federation accounting — moves.
+        read = (kg.read_shard(plan.ppn) if _has_replicated_layout(kg)
+                else None)
         multi = plan.n_patterns > 1
         table: Optional[Bindings] = None
         for op in plan.ops:
             s, p, o = op.pattern
-            per_shard = [sh.match(None if is_var(s) else s,
-                                  None if is_var(p) else p,
-                                  None if is_var(o) else o) for sh in shards]
+            if read is None:
+                per_shard = [sh.match(None if is_var(s) else s,
+                                      None if is_var(p) else p,
+                                      None if is_var(o) else o)
+                             for sh in shards]
+            else:
+                per_shard = []
+                for s_idx, sh in enumerate(shards):
+                    vidx = sh.match_indices(None if is_var(s) else s,
+                                            None if is_var(p) else p,
+                                            None if is_var(o) else o)
+                    keep = read[kg.shard_rows(s_idx)[vidx]] == s_idx
+                    per_shard.append(sh.triples[vidx[keep]])
             rows = (np.concatenate(per_shard, axis=0)
                     if any(len(m) for m in per_shard)
                     else np.empty((0, 3), np.int32))
@@ -322,10 +347,13 @@ def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
         pos = np.repeat(lo, counts) + offs
         if probe[0] == "pallas":
             # the op owns the whole dispatch (kernel on TPU within the
-            # VMEM-residency cap, single-pass host gather otherwise)
+            # VMEM-residency cap, single-pass host gather otherwise);
+            # `order` is the build-side sort permutation, so its int32
+            # envelope is proven by its length — no min/max table scan
             from repro.kernels.join import ops as join_ops
             ri = join_ops.gather_rows(order, pos, use_kernel=probe[1],
-                                      assume_inbounds=True)
+                                      assume_inbounds=True,
+                                      bounded_by_len=True)
         else:
             ri = order[pos]
     out: Bindings = {v: c[li] for v, c in table.items()}
@@ -335,23 +363,24 @@ def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
     return out
 
 
-def _federation_bincounts(triple_shard: np.ndarray,
-                          idx_list: Sequence[np.ndarray],
+def _federation_bincounts(shard_ids_list: Sequence[np.ndarray],
                           n_shards: int) -> np.ndarray:
-    """(n_patterns, n_shards) match counts per shard for every distinct
-    executed pattern of the batch — one jax scatter-add dispatch for the
-    whole workload window."""
+    """(n_entries, n_shards) serving-shard counts for every distinct
+    executed (pattern[, read layout]) of the batch — one jax scatter-add
+    dispatch for the whole workload window. Each entry is the per-match
+    shard ids (primary ``triple_shard`` gather, or the replica-aware
+    ``read_shard`` gather when the layout holds read copies)."""
     import jax.numpy as jnp
 
-    if not idx_list:
+    if not shard_ids_list:
         return np.zeros((0, n_shards), np.int64)
-    lens = np.array([len(i) for i in idx_list], np.int64)
+    lens = np.array([len(i) for i in shard_ids_list], np.int64)
     if lens.sum() == 0:
-        return np.zeros((len(idx_list), n_shards), np.int64)
-    seg = np.repeat(np.arange(len(idx_list)), lens)
-    flat = np.concatenate([np.asarray(i, np.int64) for i in idx_list])
-    shard_ids = triple_shard[flat].astype(np.int32)
-    out = jnp.zeros((len(idx_list), n_shards), jnp.int32)
+        return np.zeros((len(shard_ids_list), n_shards), np.int64)
+    seg = np.repeat(np.arange(len(shard_ids_list)), lens)
+    shard_ids = np.concatenate(
+        [np.asarray(i, np.int32) for i in shard_ids_list])
+    out = jnp.zeros((len(shard_ids_list), n_shards), jnp.int32)
     out = out.at[jnp.asarray(seg), jnp.asarray(shard_ids)].add(1)
     return np.asarray(out).astype(np.int64)
 
@@ -440,17 +469,28 @@ class JaxExecutor:
             results.append((table or {}, stats))
 
         # one dispatched batch prices the federation of every distinct
-        # pattern executed in the window
+        # pattern executed in the window. On a replicated layout the
+        # serving shard of a match depends on the query's PPN (its local
+        # copies serve for free), so entries are keyed per (pattern, ppn)
+        # and gathered through the facade's cached read_shard(ppn).
         t0 = time.perf_counter()
-        distinct = list(match_cache)
-        counts = _federation_bincounts(
-            triple_shard, [match_cache[pat][0] for pat in distinct],
-            kg.n_shards)
+        replicated = _has_replicated_layout(kg)
+        if replicated:
+            keys = [(pat, plans[qi].ppn) for qi, pat in executed]
+            distinct = list(dict.fromkeys(keys))
+            idx_lists = [kg.read_shard(ppn)[match_cache[pat][0]]
+                         for pat, ppn in distinct]
+        else:
+            keys = [pat for _, pat in executed]
+            distinct = list(match_cache)
+            idx_lists = [triple_shard[match_cache[pat][0]]
+                         for pat in distinct]
+        counts = _federation_bincounts(idx_lists, kg.n_shards)
         count_of = dict(zip(distinct, counts))
-        for qi, pat in executed:
+        for key, (qi, pat) in zip(keys, executed):
             stats = results[qi][1]
             plan = plans[qi]
-            per_shard = count_of[pat]
+            per_shard = count_of[key]
             stats.scan_rows_critical += int(per_shard.max())
             off = per_shard.copy()
             off[plan.ppn] = 0

@@ -31,28 +31,41 @@ from repro.core.migration import TRIPLE_BYTES
 from repro.query.pattern import Pattern, Query, is_var
 
 
-def primary_shard(q: Query, space, state) -> int:
+def primary_shard(q: Query, space, state, replicas=None) -> int:
     """PPN selection: shard holding the highest number of the query's
-    features, weighted by feature size (Sec. IV)."""
+    features, weighted by feature size (Sec. IV). With a
+    ``repro.replicate.ReplicaMap``, every shard holding a *copy* of a
+    feature collects that feature's vote — the PPN prefers the shard with
+    the most local copies of the plan's features (a primary-only map votes
+    identically to the replica-free rule)."""
     feats = space.query_features(q)
     votes = np.zeros(state.n_shards)
     for f in feats.tolist():
-        votes[state.feature_to_shard[f]] += 1 + np.log1p(
-            state.feature_sizes[f])
+        w = 1 + np.log1p(state.feature_sizes[f])
+        if replicas is None:
+            votes[state.feature_to_shard[f]] += w
+        else:
+            votes[replicas.holders(f)] += w
     return int(np.argmax(votes))
 
 
-def pattern_home(pat: Pattern, space, state) -> int:
+def pattern_home(pat: Pattern, space, state, replicas=None,
+                 ppn: int | None = None) -> int:
     """Shard homing a pattern's feature (PO if tracked, else P); -1 means an
-    unbound predicate (broadcast to every shard)."""
+    unbound predicate (broadcast to every shard). When the feature is
+    replicated onto the query's PPN, the PPN serves it locally — the home
+    IS the PPN (no SERVICE call)."""
     s, p, o = pat
     if is_var(p):
         return -1
+    f = None
     if not is_var(o):
-        po = space.po_index(p, o)
-        if po is not None:
-            return int(state.feature_to_shard[po])
-    return int(state.feature_to_shard[space.p_index(p)])
+        f = space.po_index(p, o)
+    if f is None:
+        f = space.p_index(p)
+    if replicas is not None and ppn is not None and replicas.has(f, ppn):
+        return int(ppn)
+    return int(state.feature_to_shard[f])
 
 
 # --------------------------------------------------------------------------- #
@@ -104,12 +117,13 @@ class QueryPlan:
         return "\n".join(lines)
 
 
-def _resolve_source(stats_source) -> Tuple[object, object, object]:
-    """(store, space, state) from any supported stats source."""
+def _resolve_source(stats_source) -> Tuple[object, object, object, object]:
+    """(store, space, state, replicas) from any supported stats source."""
     store = getattr(stats_source, "store", stats_source)
     space = getattr(stats_source, "space", None)
     state = getattr(stats_source, "state", None)
-    return store, space, state
+    replicas = getattr(stats_source, "replicas", None)
+    return store, space, state, replicas
 
 
 def _join_order(patterns: Sequence[Pattern],
@@ -131,14 +145,14 @@ def _join_order(patterns: Sequence[Pattern],
 
 def plan(q: Query, stats_source) -> QueryPlan:
     """Build the execution plan for ``q`` against ``stats_source``."""
-    store, space, state = _resolve_source(stats_source)
+    store, space, state, replicas = _resolve_source(stats_source)
     counts = {pat: store.count(None if is_var(pat[0]) else pat[0],
                                None if is_var(pat[1]) else pat[1],
                                None if is_var(pat[2]) else pat[2])
               for pat in q.patterns}
     order = _join_order(q.patterns, counts)
     federated = space is not None and state is not None
-    ppn = primary_shard(q, space, state) if federated else 0
+    ppn = primary_shard(q, space, state, replicas) if federated else 0
     n_shards = state.n_shards if federated else 1
     total = max(store.n_triples, 1)
 
@@ -148,7 +162,8 @@ def plan(q: Query, stats_source) -> QueryPlan:
         pat_vars = [s for s in pat if is_var(s)]
         join_vars = tuple(dict.fromkeys(v for v in pat_vars if v in bound))
         new_vars = tuple(dict.fromkeys(v for v in pat_vars if v not in bound))
-        home = pattern_home(pat, space, state) if federated else 0
+        home = (pattern_home(pat, space, state, replicas, ppn)
+                if federated else 0)
         ops.append(PlanOp(pattern=pat, est_rows=counts[pat],
                           selectivity=counts[pat] / total,
                           join_vars=join_vars, new_vars=new_vars,
@@ -184,19 +199,32 @@ class QueryProfile:
 
 
 def stats_from_profile(q: Query, prof: QueryProfile, space, state,
-                       triple_shard: np.ndarray):
+                       triple_shard: np.ndarray, replicas=None,
+                       owners: np.ndarray | None = None):
     """Re-account a profiled query under a candidate layout.
 
     Reproduces the executors' federation statistics exactly — same PPN rule,
     same per-shard scan/shipping arithmetic — without re-running any joins.
-    ``triple_shard`` maps every global triple row to its candidate shard."""
+    ``triple_shard`` maps every global triple row to its candidate
+    (primary) shard. With a ``repro.replicate.ReplicaMap`` (and the
+    per-triple ``owners`` features), shipping is charged against the
+    *nearest replica*: matches whose owner feature holds a copy on the PPN
+    are scanned there — local, nothing shipped — and only copy-less
+    matches ship from their primary."""
     from repro.query.exec import ExecStats
     stats = ExecStats(join_rows=prof.join_rows, rows=prof.rows,
                       cartesian_rows=prof.cartesian_rows)
-    ppn = primary_shard(q, space, state)
+    ppn = primary_shard(q, space, state, replicas)
+    on_ppn = (replicas.on_shard(ppn)
+              if replicas is not None and owners is not None
+              and replicas.has_replicas else None)
     multi = prof.n_patterns > 1
     for idx in prof.pattern_rows:
-        per_shard = np.bincount(triple_shard[idx], minlength=state.n_shards)
+        shard_ids = triple_shard[idx]
+        if on_ppn is not None and len(idx):
+            shard_ids = np.where(on_ppn[owners[idx]], np.int32(ppn),
+                                 shard_ids)
+        per_shard = np.bincount(shard_ids, minlength=state.n_shards)
         stats.scan_rows_critical += int(per_shard.max()) if len(idx) else 0
         off = per_shard.copy()
         off[ppn] = 0

@@ -30,14 +30,19 @@ def _term(slot: int, d: Dictionary | None) -> str:
 
 def federated_sparql(q: Query, space: FeatureSpace, state: PartitionState,
                      dictionary: Dictionary | None = None,
-                     endpoints: List[str] | None = None) -> str:
-    """Render the federated form of ``q`` under the current PMeta."""
-    ppn = primary_shard(q, space, state)
+                     endpoints: List[str] | None = None,
+                     replicas=None) -> str:
+    """Render the federated form of ``q`` under the current PMeta. Pass the
+    layout's ``ReplicaMap`` (e.g. ``kg.replicas``) so the rendering matches
+    the replica-aware plan the engine executes: the PPN vote counts local
+    copies, and a pattern replicated onto the PPN stays plain (no SERVICE
+    clause)."""
+    ppn = primary_shard(q, space, state, replicas)
     eps = endpoints or [f"http://node{i}/sparql" for i in range(state.n_shards)]
     head = " ".join(f"?v{-v - 1}" for v in q.variables())
     lines = [f"SELECT {head} WHERE {{"]
     for pat in q.patterns:
-        home = pattern_home(pat, space, state)
+        home = pattern_home(pat, space, state, replicas, ppn)
         triple = " ".join(_term(t, dictionary) for t in pat) + " ."
         if home in (ppn, -1):
             lines.append(f"  {triple}")
@@ -47,13 +52,13 @@ def federated_sparql(q: Query, space: FeatureSpace, state: PartitionState,
     return "\n".join(lines)
 
 
-def service_counts(q: Query, space: FeatureSpace,
-                   state: PartitionState) -> Dict[str, int]:
+def service_counts(q: Query, space: FeatureSpace, state: PartitionState,
+                   replicas=None) -> Dict[str, int]:
     """How many patterns run locally at the PPN vs. via SERVICE calls."""
-    ppn = primary_shard(q, space, state)
+    ppn = primary_shard(q, space, state, replicas)
     local = remote = 0
     for pat in q.patterns:
-        home = pattern_home(pat, space, state)
+        home = pattern_home(pat, space, state, replicas, ppn)
         if home in (ppn, -1):
             local += 1
         else:

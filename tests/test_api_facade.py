@@ -70,8 +70,10 @@ def test_jax_batch_matches_numpy_per_query_and_plan_cache(small_lubm):
     per_query = [svc.query(q) for q in workload]          # numpy, one at a time
     assert kg.plan_builds == len(workload)
 
-    svc.executor = JaxExecutor(probe_kernel=True)         # pin the kernels
-    batch = svc.query_batch(workload)                     # jax, one batch
+    # jax, one batch — run the executor directly: the service itself would
+    # serve these (query, epoch) repeats from the facade's result cache
+    jx = JaxExecutor(probe_kernel=True)                   # pin the kernels
+    batch = jx.run_batch([kg.plan(q) for q in workload], kg)
     for q, (bn, sn), (bj, sj) in zip(workload, per_query, batch):
         assert canon_bindings(bn) == canon_bindings(bj), q.name
         for f in qexec.ExecStats.COMPARABLE:
@@ -80,6 +82,16 @@ def test_jax_batch_matches_numpy_per_query_and_plan_cache(small_lubm):
     # the whole second pass was served from the plan cache
     assert kg.plan_builds == len(workload)
     assert kg.plan_hits == len(workload)
+
+    # and a service-level repeat at the same epoch is served from the
+    # result cache without reaching any executor
+    svc.executor = jx
+    assert kg.result_hits == 0
+    repeat = svc.query_batch(workload)
+    assert kg.result_hits == len(workload)
+    assert kg.plan_builds == len(workload)
+    for (bn, _), (br, _) in zip(per_query, repeat):
+        assert canon_bindings(bn) == canon_bindings(br)
 
     # an adaptation round prices every candidate from cached plans/profiles:
     # still exactly one plan built per (query, store) — until the commit

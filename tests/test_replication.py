@@ -1,0 +1,481 @@
+"""repro.replicate: ReplicaMap mechanics, replica-aware planning/execution
+equivalence (numpy == jax == jax-pallas, including mid-drain epochs),
+nearest-replica federation accounting, budgeted promotion/demotion, and the
+result-cache / mid-drain-guard satellites."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+from test_executors import _random_dataset, _random_query
+
+from repro.api import KGService, MigrationSession, PartitionedKG, ReplicaMap
+from repro.core import migration
+from repro.core.partition import PartitionState, hash_partition
+from repro.query import exec as qexec
+from repro.query import plan as qplan
+from repro.query.pattern import Query, var
+from repro.replicate import propose_replicas
+
+
+# --------------------------------------------------------------------------- #
+# ReplicaMap mechanics
+# --------------------------------------------------------------------------- #
+
+def _state(f2s, sizes=None, n_shards=None):
+    f2s = np.asarray(f2s, np.int32)
+    sizes = (np.ones(len(f2s), np.int64) if sizes is None
+             else np.asarray(sizes, np.int64))
+    return PartitionState(f2s, sizes,
+                          n_shards or int(f2s.max()) + 1)
+
+
+def test_replica_map_basics():
+    state = _state([0, 1, 2], sizes=[10, 20, 30], n_shards=3)
+    rmap = ReplicaMap.primary_only(state)
+    assert not rmap.has_replicas
+    assert rmap.holders(1) == [1]
+    assert np.array_equal(rmap.n_copies(), [1, 1, 1])
+    assert rmap.replica_bytes(state.feature_sizes) == 0
+
+    rmap.add(0, 2)
+    rmap.add(0, 0)                       # primary bit: no-op
+    assert rmap.has_replicas and rmap.has(0, 2)
+    assert rmap.holders(0) == [0, 2]
+    assert np.array_equal(rmap.replicated(), [0])
+    assert rmap.replica_bytes(state.feature_sizes) == \
+        10 * migration.TRIPLE_BYTES
+
+    rmap.move_primary(0, 0, 1)           # copy leaves 0, lands on 1
+    assert rmap.holders(0) == [1, 2]
+    rmap.remove(0, 2)
+    assert not rmap.has_replicas
+
+    rmap.extend(np.array([1, 1, 2, 0], np.int32))
+    assert rmap.n_features == 4 and rmap.holders(3) == [0]
+
+
+def test_primary_only_votes_match_replica_free_ppn(small_lubm, space):
+    """A primary-only map must leave every PPN vote unchanged — the seed
+    behaviour of every facade plan."""
+    space.track_workload(small_lubm.base_workload())
+    state = hash_partition(space.feature_sizes(), 4, seed=0)
+    rmap = ReplicaMap.primary_only(state)
+    for q in small_lubm.extended_workload():
+        assert qplan.primary_shard(q, space, state) == \
+            qplan.primary_shard(q, space, state, rmap)
+
+
+# --------------------------------------------------------------------------- #
+# replica-aware migration plans and chunks
+# --------------------------------------------------------------------------- #
+
+def test_plan_with_replica_delta_adds_drops_and_bytes():
+    sizes = np.array([5, 7, 11], np.int64)
+    old = _state([0, 1, 2], sizes, 3)
+    new = _state([1, 1, 2], sizes, 3)    # feature 0 moves 0 -> 1
+    r_old = ReplicaMap.primary_only(old)
+    r_old.add(1, 0)                      # a replica that will fall cold
+    r_new = ReplicaMap.primary_only(new)
+    r_new.add(0, 0)                      # keep a copy at 0's old primary
+    r_new.add(2, 1)                      # fresh copy: real traffic
+
+    plan = migration.plan(old, new, r_old, r_new)
+    assert plan.moves == [(0, 0, 1)]
+    # the retained old-primary copy ships nothing (src == dst marks local)
+    assert (0, 0, 0) in plan.replica_adds
+    assert (2, 2, 1) in plan.replica_adds
+    assert plan.replica_drops == [(1, 0)]
+    assert plan.n_triples == 5 + 11      # move + the one real copy
+    assert plan.bytes == (5 + 11) * migration.TRIPLE_BYTES
+
+    chunks = migration.chunk_plan(plan, sizes, bytes_budget=1)
+    assert sum(c.bytes for c in chunks) == plan.bytes
+    assert sorted(m for c in chunks for m in c.moves) == sorted(plan.moves)
+    assert sorted(a for c in chunks for a in c.replica_adds) == \
+        sorted(plan.replica_adds)
+    assert sorted(d for c in chunks for d in c.replica_drops) == \
+        sorted(plan.replica_drops)
+    # feature 0's move and its retained-copy add are atomic: same chunk
+    for c in chunks:
+        assert ((0, 0, 1) in c.moves) == ((0, 0, 0) in c.replica_adds)
+
+
+def test_apply_chunk_with_replica_ops_updates_views_and_epoch(small_lubm):
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    f = int(np.argmax(kg.state.feature_sizes))
+    src = int(kg.state.feature_to_shard[f])
+    dst = (src + 1) % kg.n_shards
+
+    epoch0, n_rows0 = kg.epoch, sum(len(v.triples) for v in kg.shards)
+    chunk = migration.MigrationChunk(moves=[], n_triples=0, bytes=0,
+                                     replica_adds=[(f, src, dst)])
+    kg.apply_chunk(chunk)
+    assert kg.epoch == epoch0 + 1
+    assert kg.replicas.has(f, dst)
+    # the copy is materialized in dst's view (and only there)
+    extra = int(kg.state.feature_sizes[f])
+    assert sum(len(v.triples) for v in kg.shards) == n_rows0 + extra
+    assert kg.shard_sizes() == [len(r) for r in kg._rows]   # primaries only
+
+    # read layout: the feature's triples read locally at dst, else primary
+    rows_f = np.flatnonzero(kg.owners == f)
+    assert (kg.read_shard(dst)[rows_f] == dst).all()
+    other = (dst + 1) % kg.n_shards
+    assert (kg.read_shard(other)[rows_f] == src).all()
+
+    # dropping the copy restores the original layout (new epoch again)
+    kg.apply_chunk(migration.MigrationChunk(
+        moves=[], n_triples=0, bytes=0, replica_drops=[(f, dst)]))
+    assert kg.epoch == epoch0 + 2
+    assert not kg.replicas.has_replicas
+    assert sum(len(v.triples) for v in kg.shards) == n_rows0
+
+
+# --------------------------------------------------------------------------- #
+# executor equivalence on replicated layouts (the acceptance property)
+# --------------------------------------------------------------------------- #
+
+def _random_replicas(rng, state):
+    rmap = ReplicaMap.primary_only(state)
+    for f in range(len(state.feature_to_shard)):
+        if rng.random() < 0.4:
+            rmap.add(f, int(rng.integers(state.n_shards)))
+    return rmap
+
+
+def _assert_all_backends_match(kg, queries, refs=None):
+    """numpy == jax == jax-pallas bindings and ExecStats on ``kg``; when
+    ``refs`` (committed-layout results) are given, bindings and row counts
+    must match those too."""
+    execs = [qexec.NumpyExecutor(), qexec.JaxExecutor(),
+             qexec.JaxExecutor(pallas=True, probe_kernel=True),
+             qexec.JaxExecutor(pallas=True)]
+    plans = [kg.plan(q) for q in queries]
+    all_res = [ex.run_batch(plans, kg) for ex in execs]
+    for qi, q in enumerate(queries):
+        ref_b, ref_s = all_res[0][qi]
+        for ex, res in zip(execs[1:], all_res[1:]):
+            b, s = res[qi]
+            assert canon_bindings(b) == canon_bindings(ref_b), \
+                (q.name, ex.name, kg.epoch)
+            for f in qexec.ExecStats.COMPARABLE:
+                assert getattr(s, f) == getattr(ref_s, f), \
+                    (q.name, ex.name, f, kg.epoch)
+        if refs is not None:
+            rb, rs = refs[qi]
+            assert canon_bindings(ref_b) == canon_bindings(rb), \
+                (q.name, kg.epoch)
+            assert ref_s.rows == rs.rows
+        # nearest-replica re-accounting from the layout-invariant profile
+        # reproduces the executed federation stats exactly
+        est = qplan.stats_from_profile(q, kg.profile(q), kg.space, kg.state,
+                                       kg.triple_shard,
+                                       replicas=kg.replicas, owners=kg.owners)
+        for f in qexec.ExecStats.COMPARABLE:
+            assert getattr(est, f) == getattr(ref_s, f), \
+                (q.name, "profile", f, kg.epoch)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_backends_and_profile_agree_on_random_replicated_layouts(seed):
+    """Property: on random stores, BGPs, layouts AND replica sets, every
+    backend produces identical bindings/stats, and stats_from_profile's
+    nearest-replica accounting reproduces them exactly."""
+    rng = np.random.default_rng(seed)
+    store, space = _random_dataset(rng)
+    state = hash_partition(space.feature_sizes(),
+                           int(rng.integers(2, 7)), seed=seed % 17)
+    kg = PartitionedKG(store, space, state,
+                       replicas=_random_replicas(rng, state))
+    queries = [_random_query(rng, store, name=f"R{i}") for i in range(3)]
+    _assert_all_backends_match(kg, queries)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_mid_drain_epochs_with_replica_ops_serve_identically(seed):
+    """At EVERY epoch of a drain that moves features AND promotes/demotes
+    replicas, all backends agree with each other and with the committed
+    layout's bindings."""
+    rng = np.random.default_rng(seed)
+    store, space = _random_dataset(rng)
+    sizes = space.feature_sizes()
+    n_shards = 4
+    state = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    target = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    kg = PartitionedKG(store, space, state.copy(),
+                       replicas=_random_replicas(rng, state))
+    target_replicas = _random_replicas(rng, target)
+    ref_kg = PartitionedKG(store, space, target.copy(),
+                           replicas=target_replicas.copy())
+    queries = [_random_query(rng, store, name=f"R{i}") for i in range(3)]
+    refs = [qexec.NumpyExecutor().run(ref_kg.plan(q), ref_kg)
+            for q in queries]
+
+    budget = max(int(sizes.sum()) * migration.TRIPLE_BYTES // 5, 1)
+    session = MigrationSession(kg, target, bytes_budget=budget,
+                               target_replicas=target_replicas)
+    epochs = []
+    while True:                          # includes the pre-drain epoch
+        epochs.append(kg.epoch)
+        _assert_all_backends_match(kg, queries, refs=refs)
+        if session.step() is None:
+            break
+    assert np.array_equal(kg.state.feature_to_shard,
+                          target.feature_to_shard)
+    assert kg.replicas == target_replicas
+    assert len(set(epochs)) == len(epochs)
+
+
+def test_nearest_replica_accounting_unit():
+    """Hand-built 2-shard layout: a small feature homed off-PPN ships its
+    matches — until a replica lands on the PPN, which zeroes the shipping
+    and re-homes the scan."""
+    from repro.graph.triples import Dictionary, build_store
+    from repro.core.features import FeatureSpace
+
+    d = Dictionary()
+    for i in range(40):
+        d.encode(f"t{i}")
+    p_big, p_small = 1, 2
+    rows = [[i + 3, p_big, 30] for i in range(20)] \
+        + [[i + 3, p_small, 31] for i in range(4)]
+    store = build_store(np.array(rows, np.int32), d)
+    space = FeatureSpace(store)
+    f_big = space.p_index(p_big)
+    f_small = space.p_index(p_small)
+    f2s = np.zeros(space.n_features, np.int32)
+    f2s[f_big], f2s[f_small] = 1, 0
+    state = PartitionState(f2s, space.feature_sizes(), 2)
+
+    x = var(0)
+    q = Query(name="near", patterns=((x, p_big, 30), (x, p_small, 31)))
+
+    kg0 = PartitionedKG(store, space, state.copy())
+    plan0 = kg0.plan(q)
+    assert plan0.ppn == 1                # the big feature wins the vote
+    _, s0 = qexec.NumpyExecutor().run(plan0, kg0)
+    assert s0.rows_shipped == 4          # p_small matches shipped from 0
+    assert s0.bytes_shipped == 4 * migration.TRIPLE_BYTES
+
+    rmap = ReplicaMap.primary_only(state)
+    rmap.add(f_small, 1)                 # copy beside the PPN
+    kg1 = PartitionedKG(store, space, state.copy(), replicas=rmap)
+    plan1 = kg1.plan(q)
+    assert plan1.ppn == 1
+    assert all(not op.service for op in plan1.ops)   # both ops now local
+    _, s1 = qexec.NumpyExecutor().run(plan1, kg1)
+    assert s1.rows_shipped == 0 and s1.bytes_shipped == 0
+    assert s1.messages == 0 and s1.distributed_joins == 0
+    assert canon_bindings(qexec.NumpyExecutor().run(plan0, kg0)[0]) == \
+        canon_bindings(qexec.NumpyExecutor().run(plan1, kg1)[0])
+
+    est = qplan.stats_from_profile(q, kg1.profile(q), space, kg1.state,
+                                   kg1.triple_shard, replicas=rmap,
+                                   owners=kg1.owners)
+    assert est.bytes_shipped == 0 and est.rows_shipped == 0
+
+
+def test_drain_retains_copy_at_old_primary(small_lubm):
+    """A move whose target map keeps a read copy at the feature's OLD
+    primary must land with that copy intact (the add applies with post-move
+    semantics — the move clears the bit, the add restores it)."""
+    svc = KGService.from_dataset(small_lubm, n_shards=4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    f = int(np.argmax(kg.state.feature_sizes))
+    s0 = int(kg.state.feature_to_shard[f])
+    s1 = (s0 + 1) % kg.n_shards
+    target = kg.state.copy()
+    target.feature_to_shard[f] = s1
+    target_rep = kg.replicas.copy()
+    target_rep.move_primary(f, s0, s1)
+    target_rep.add(f, s0)
+
+    session = MigrationSession(kg, target, bytes_budget=1,
+                               target_replicas=target_rep)
+    adds = [a for c in session.chunks for a in c.replica_adds]
+    assert (f, s0, s0) in adds               # zero-traffic retained copy
+    session.drain()
+    assert kg.replicas == target_rep
+    assert kg.replicas.has(f, s0)
+    rows_f = np.flatnonzero(kg.owners == f)
+    assert (kg.read_shard(s0)[rows_f] == s0).all()
+    assert (kg.triple_shard[rows_f] == s1).all()
+
+
+def test_move_onto_existing_replica_ships_nothing():
+    """A primary move whose destination already holds a replica copy is a
+    re-designation, not a transfer: zero bytes, zero pairs, and the chunk
+    budget is not consumed by phantom traffic."""
+    sizes = np.array([5], np.int64)
+    old, new = _state([0], sizes, 2), _state([1], sizes, 2)
+    r_old = ReplicaMap.primary_only(old)
+    r_old.add(0, 1)
+    plan = migration.plan(old, new, r_old, ReplicaMap.primary_only(new))
+    assert plan.moves == [(0, 0, 1)] and plan.local_moves == [0]
+    assert plan.bytes == 0 and plan.n_triples == 0
+    net = qexec.NetworkModel(latency_s=0.1, bandwidth_Bps=1000.0)
+    assert migration.migration_seconds(plan, net) == 0.0
+    chunks = migration.chunk_plan(plan, sizes, bytes_budget=1)
+    assert sum(c.bytes for c in chunks) == 0
+    assert [m for c in chunks for m in c.moves] == plan.moves
+
+
+def test_replica_unaware_custom_measure_disables_replication():
+    """A custom objective without a ``replicas`` parameter must neither
+    crash nor silently receive a ReplicaMap: the round runs primary-only.
+    One with a keyword-only ``replicas`` opts in."""
+    from repro.core.adaptive import _accepts_replicas
+
+    assert not _accepts_replicas(lambda cand: 0.0)
+    assert not _accepts_replicas(lambda cand, scale=1.0: 0.0)
+    assert _accepts_replicas(lambda cand, replicas=None: 0.0)
+    assert _accepts_replicas(lambda cand, *, replicas=None: 0.0)
+    assert _accepts_replicas(lambda cand, **kw: 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# promotion/demotion policy under a byte budget
+# --------------------------------------------------------------------------- #
+
+def _policy_fixture():
+    from repro.graph.triples import Dictionary, build_store
+    from repro.core.features import FeatureSpace
+
+    d = Dictionary()
+    for i in range(60):
+        d.encode(f"t{i}")
+    p_anchor, p_hot, p_cool = 1, 2, 3
+    rows = [[i + 4, p_anchor, 40] for i in range(30)] \
+        + [[i + 4, p_hot, 41] for i in range(6)] \
+        + [[i + 4, p_cool, 42] for i in range(6)]
+    store = build_store(np.array(rows, np.int32), d)
+    space = FeatureSpace(store)
+    f2s = np.zeros(space.n_features, np.int32)
+    f2s[space.p_index(p_anchor)] = 1     # queries home on shard 1
+    state = PartitionState(f2s, space.feature_sizes(), 2)
+    x = var(0)
+    hot = Query(name="hot", frequency=9.0,
+                patterns=((x, p_anchor, 40), (x, p_hot, 41)))
+    cool = Query(name="cool", frequency=1.0,
+                 patterns=((x, p_anchor, 40), (x, p_cool, 42)))
+    return space, state, [hot, cool], p_hot, p_cool
+
+
+def test_propose_replicas_promotes_hottest_within_budget():
+    space, state, queries, p_hot, p_cool = _policy_fixture()
+    f_hot, f_cool = space.p_index(p_hot), space.p_index(p_cool)
+    one_copy = int(state.feature_sizes[f_hot]) * migration.TRIPLE_BYTES
+
+    assert not propose_replicas(space, state, queries, 0).has_replicas
+    assert not propose_replicas(space, state, queries,
+                                one_copy - 1).has_replicas
+
+    tight = propose_replicas(space, state, queries, one_copy)
+    assert tight.has(f_hot, 1)           # hottest feature promoted to PPN
+    assert not tight.has(f_cool, 1)      # the cold one did not fit
+    assert tight.replica_bytes(state.feature_sizes) <= one_copy
+
+    roomy = propose_replicas(space, state, queries, 4 * one_copy)
+    assert roomy.has(f_hot, 1) and roomy.has(f_cool, 1)
+    assert roomy.replica_bytes(state.feature_sizes) <= 4 * one_copy
+
+
+def test_cold_replicas_are_demoted_via_plan_delta():
+    space, state, queries, p_hot, p_cool = _policy_fixture()
+    f_hot, f_cool = space.p_index(p_hot), space.p_index(p_cool)
+    current = ReplicaMap.primary_only(state)
+    current.add(f_cool, 1)               # stale copy from an older workload
+    one_copy = int(state.feature_sizes[f_hot]) * migration.TRIPLE_BYTES
+
+    proposed = propose_replicas(space, state, queries, one_copy)
+    plan = migration.plan(state, state, current, proposed)
+    assert plan.moves == []
+    assert (f_hot, 0, 1) in plan.replica_adds       # promotion ships from 0
+    assert (f_cool, 1) in plan.replica_drops        # demotion
+    assert plan.bytes == one_copy                   # drops are free
+
+
+# --------------------------------------------------------------------------- #
+# service loop: replica_budget knob, drain, guard + result-cache satellites
+# --------------------------------------------------------------------------- #
+
+def test_service_replica_round_reduces_bytes_and_drains(small_lubm):
+    """replica_budget > 0 threads end to end: the accepted round promotes
+    copies through a chunked MigrationSession, the drained layout serves
+    strictly fewer shipped bytes than its primary-only twin, and
+    should_adapt stays False mid-drain."""
+    window = small_lubm.extended_workload()
+    new10 = small_lubm.workload([f"EQ{i}" for i in range(1, 11)])
+
+    base = KGService.from_dataset(small_lubm, n_shards=4)
+    base.bootstrap(small_lubm.base_workload())
+    base.query_batch(window)
+    rep0 = base.adapt(new10)
+    assert rep0.accepted and not base.kg.replicas.has_replicas
+
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 migration_budget=120_000,
+                                 replica_budget=256_000)
+    assert svc.controller is None       # config carried by the partitioner
+    svc.bootstrap(small_lubm.base_workload())
+    assert svc.controller.config.replica_budget == 256_000
+    svc.query_batch(window)
+    report = svc.adapt(new10)
+    assert report.accepted
+    assert report.replicas is not None and report.replicas.has_replicas
+    assert report.plan.replica_adds
+    assert report.replica_bytes <= 256_000
+    assert svc.session is not None
+
+    while svc.session is not None:
+        assert not svc.should_adapt()   # mid-drain guard satellite
+        svc.query_batch(window)
+    assert svc.kg.replicas == report.replicas
+
+    bytes_plain = sum(st.bytes_shipped
+                      for _, st in base.query_batch(window))
+    bytes_repl = sum(st.bytes_shipped
+                     for _, st in svc.query_batch(window))
+    assert bytes_repl < bytes_plain
+
+
+def test_result_cache_skips_reexecution_and_invalidates_on_epoch(small_lubm):
+    """Satellite: a repeated (query, epoch) pair is served without touching
+    the executor; any epoch bump (here: a replica promotion) invalidates."""
+    class CountingExecutor(qexec.NumpyExecutor):
+        calls = 0
+
+        def run_batch(self, plans, kg):
+            CountingExecutor.calls += len(plans)
+            return super().run_batch(plans, kg)
+
+    svc = KGService.from_dataset(small_lubm, n_shards=4,
+                                 executor=CountingExecutor())
+    kg = svc.bootstrap(small_lubm.base_workload())
+    window = small_lubm.extended_workload()
+
+    first = svc.query_batch(window)
+    assert CountingExecutor.calls == len(window)
+    # mutating a returned result must not corrupt later hits
+    for b, _ in first:
+        for c in b.values():
+            c[:] = -1
+    again = svc.query_batch(window)                  # same epoch: all hits
+    assert CountingExecutor.calls == len(window)
+    assert kg.result_hits == len(window)
+    for (b0, s0), (b1, s1) in zip(first, again):
+        assert s1 == s0 and s1 is not s0             # stats snapshot, too
+        assert all((c != -1).all() for c in b1.values() if len(c))
+
+    f = int(np.argmax(kg.state.feature_sizes))
+    src = int(kg.state.feature_to_shard[f])
+    kg.apply_chunk(migration.MigrationChunk(
+        moves=[], n_triples=0, bytes=0,
+        replica_adds=[(f, src, (src + 1) % kg.n_shards)]))
+    svc.query_batch(window)                          # new epoch: re-executed
+    assert CountingExecutor.calls == 2 * len(window)
