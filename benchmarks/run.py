@@ -13,7 +13,7 @@ import time
 import traceback
 
 BENCHES = ("clustering", "exp1", "exp2", "migration", "replication",
-           "moe_placement", "kernels", "train", "roofline")
+           "writes", "moe_placement", "kernels", "train", "roofline")
 
 
 def main() -> None:

@@ -115,6 +115,57 @@ print(f"[ci] replicated serving: {len(kg.replicas.replicated())} features "
       f"executors byte-identical")
 EOF
 
+echo "== smoke: mixed read/write serving (LUBM(1), writes mid-drain, all executors) =="
+python - <<'EOF'
+import numpy as np
+from repro import write as kgwrite
+from repro.api import KGService
+from repro.graph import lubm
+from repro.query import exec as qexec
+
+def canon(b):
+    return sorted(map(tuple, np.stack(
+        [b[k] for k in sorted(b)], axis=1).tolist())) if b else []
+
+ds = lubm.load(1, seed=0)
+window = ds.extended_workload()
+svc = KGService.from_dataset(ds, n_shards=4, migration_budget=120_000,
+                             replica_budget=256_000)
+svc.bootstrap(ds.base_workload())
+svc.query_batch(window)
+report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+assert report.accepted and svc.session is not None
+rng = np.random.default_rng(0)
+t = ds.store.triples
+windows = 0
+while svc.session is not None:       # writes land between every chunk
+    rows = t[rng.integers(0, len(t), 48)].copy()
+    rows[:, 0] = svc.fresh_ids(len(rows)).astype(np.int32)
+    rep = svc.insert(rows)
+    assert rep.effective and rep.n_inserted == 48
+    svc.delete(rows[:16])
+    svc.query_batch(window)
+    windows += 1
+assert windows >= 2 and svc.write_log.n_inserted > svc.write_log.n_deleted
+kg = svc.kg
+twin = kgwrite.rebuild_from_scratch(kg)
+plans = [kg.plan(q) for q in window]
+ref = qexec.NumpyExecutor().run_batch(
+    [twin.plan(q) for q in window], twin)
+for name in ("numpy", "jax", "jax-pallas"):
+    got = qexec.get_executor(name).run_batch(plans, kg)
+    for q, (rb, rs), (gb, gs) in zip(window, ref, got):
+        assert canon(rb) == canon(gb), (q.name, name)
+        for f in qexec.ExecStats.COMPARABLE:
+            assert getattr(rs, f) == getattr(gs, f), (q.name, name, f)
+print(f"[ci] mixed read/write serving: {svc.write_log.n_inserted} inserts/"
+      f"{svc.write_log.n_deleted} deletes over {windows} drain windows, "
+      f"epoch {kg.epoch}, all executors == rebuild-from-scratch twin")
+EOF
+
+echo "== smoke: benchmarks/bench_writes.py --dry-run =="
+python benchmarks/bench_writes.py --dry-run
+
 echo "== smoke: benchmarks/bench_replication.py --dry-run =="
 python benchmarks/bench_replication.py --dry-run
 

@@ -13,6 +13,9 @@ Everything callers need to serve a partitioned knowledge graph:
   ``migration_budget`` knob;
 * :class:`ReplicaMap` — workload-aware read replication of hot features
   (``repro.replicate``), budgeted by the service's ``replica_budget`` knob;
+* :class:`WriteBatch` / :class:`WriteReport` — the live write path
+  (``repro.write``): ``svc.insert(...)`` / ``svc.delete(...)`` served
+  concurrently with queries, replication, and an in-flight drain;
 * executors: :class:`Executor` protocol with :class:`NumpyExecutor`
   (reference) and :class:`JaxExecutor` (batched; ``pallas=True`` — the
   ``executor="jax-pallas"`` knob — probes joins through the
@@ -28,6 +31,7 @@ from repro.api.service import KGService
 from repro.migrate import MigrationSession
 from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
 from repro.replicate import ReplicaMap
+from repro.write import WriteBatch, WriteLog, WriteReport
 
 __all__ = [
     "AWAPartitioner",
@@ -41,4 +45,7 @@ __all__ = [
     "Partitioner",
     "ReplicaMap",
     "WawPartitioner",
+    "WriteBatch",
+    "WriteLog",
+    "WriteReport",
 ]

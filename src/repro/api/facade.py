@@ -25,6 +25,15 @@ the same ``MigrationChunk`` deltas as moves. An epoch-keyed result cache
 (``cached_result``/``store_result``) sits beside the plan cache so repeated
 ``(query, epoch)`` pairs in hot TM windows skip re-execution entirely.
 
+Live mutation arrives through ``apply_write`` (``repro.write``): writes are
+routed by the primary assignment, fanned out to replica holders, re-index
+only the touched shard views, and bump both the epoch and a separate
+``data_version`` — the invalidation key for the profiles, which survive
+layout changes but not graph changes. Every cache entry carries the
+epoch/version it was built at and serving asserts the tag, so a mutating
+path that forgets to invalidate fails loudly instead of serving stale
+results.
+
 The object is duck-compatible with ``repro.query.engine.ShardedStore``
 (``.space`` / ``.state`` / ``.shards`` / ``.store`` / ``.triple_shard``), so
 any ``Executor`` runs against it unchanged.
@@ -70,20 +79,30 @@ class PartitionedKG:
         # Cached plans/results are valid for exactly one epoch; a
         # mid-migration hybrid layout is a first-class epoch like any other.
         self.epoch = 0
+        # data version: bumped by every effective write (repro.write) — the
+        # invalidation key for caches that survive layout epochs but NOT
+        # graph mutations (the layout-invariant profiles below)
+        self.data_version = 0
         # query plans, cached per (query, store) until the layout changes;
         # keyed by query name (+ patterns, so a re-defined query under the
-        # same name is re-planned)
-        self._plans: Dict[str, Tuple[tuple, qplan.QueryPlan]] = {}
+        # same name is re-planned). Entries are tagged with the epoch they
+        # were built at; serving asserts the tag — any mutating path that
+        # forgot to bump the epoch before a cached entry is served trips an
+        # assertion instead of returning stale federation annotations.
+        self._plans: Dict[str, Tuple[tuple, qplan.QueryPlan, int]] = {}
         self.plan_builds = 0           # telemetry: plans built / cache hits
         self.plan_hits = 0
         # epoch-keyed result cache beside the plan cache: bindings+stats of
         # repeated (query, epoch) pairs in hot TM windows are served without
         # re-execution; invalidated together with the plans on epoch bumps
-        self._results: Dict[str, Tuple[tuple, dict, qexec.ExecStats]] = {}
+        # (entries carry their epoch under the same stale-serving assert)
+        self._results: Dict[str, Tuple[tuple, dict, qexec.ExecStats,
+                                       int]] = {}
         self.result_hits = 0
         # layout-invariant query profiles (derived from plans; survive
-        # commits — join results don't depend on the layout)
-        self._profiles: Dict[str, Tuple[tuple, qplan.QueryProfile]] = {}
+        # commits — join results don't depend on the layout, but they DO
+        # depend on the triples: entries are tagged with the data version)
+        self._profiles: Dict[str, Tuple[tuple, qplan.QueryProfile, int]] = {}
         # read replication (repro.replicate): which shards hold a copy of
         # each feature; the primary assignment above stays authoritative
         self.replicas = replicas or ReplicaMap.primary_only(state)
@@ -282,7 +301,12 @@ class PartitionedKG:
         incremental delta. The resulting partially-migrated layout is served
         as-is (a new epoch): only shards touched by the chunk's moves and
         replica ops are re-indexed, and cached plans/results are invalidated
-        because the PPN vote and federation annotations may have shifted."""
+        because the PPN vote and federation annotations may have shifted.
+
+        The delta is derived from the **live** state, so a chunk moving a
+        feature whose triples changed since the session was planned (live
+        writes, ``apply_write``) carries the post-write rows — the row set
+        shipped is whatever the owner feature holds *now*."""
         state = self.state.copy()
         for f, _src, dst in chunk.moves:
             state.feature_to_shard[f] = dst
@@ -290,43 +314,75 @@ class PartitionedKG:
                     getattr(chunk, "replica_drops", ()))
 
     # ------------------------------------------------------------------ #
+    # live writes (repro.write)
+    # ------------------------------------------------------------------ #
+    def apply_write(self, batch) -> "object":
+        """Apply a ``repro.write.WriteBatch`` to the served graph: effective
+        rows are routed by the current primary assignment of their owner
+        feature, fanned out to every ``ReplicaMap`` holder, and only the
+        touched shard views are re-indexed. An effective write is a new
+        epoch AND a new data version (plans, results and layout-invariant
+        profiles all invalidate); a fully-redundant batch changes nothing.
+        Returns the ``repro.write.WriteReport``."""
+        from repro import write as kgwrite
+        return kgwrite.apply_batch(self, batch)
+
+    # ------------------------------------------------------------------ #
     # plans, profiles, candidate pricing
     # ------------------------------------------------------------------ #
     def plan(self, q: Query) -> qplan.QueryPlan:
         """The query's execution plan under the current layout (cached per
-        ``(query, store)``; invalidated by ``commit``/``sync_universe``)."""
+        ``(query, store)``; invalidated by ``commit``/``sync_universe``/
+        ``apply_write``)."""
         pats = tuple(q.patterns)
         entry = self._plans.get(q.name)
         if entry is None or entry[0] != pats:
-            entry = (pats, qplan.plan(q, self))
+            entry = (pats, qplan.plan(q, self), self.epoch)
             self._plans[q.name] = entry
             self.plan_builds += 1
         else:
+            assert entry[2] == self.epoch, \
+                f"stale plan served for {q.name}: cached at epoch " \
+                f"{entry[2]}, layout is at {self.epoch} — a mutating path " \
+                "bumped the epoch without invalidating"
             self.plan_hits += 1
         return entry[1]
 
     def profile(self, q: Query) -> qplan.QueryProfile:
         """Layout-invariant execution profile of ``q``, derived from its plan
-        (cached; one real execution against the global store on first use)."""
+        (cached; one real execution against the global store on first use).
+        Survives layout epochs but not writes — profiles hold global row
+        ids of the triples the query matched."""
         pats = tuple(q.patterns)
         entry = self._profiles.get(q.name)
         if entry is None or entry[0] != pats:
             entry = (pats, qexec.profile_from_plan(self.plan(q), self.store,
-                                                   self.max_join_rows))
+                                                   self.max_join_rows),
+                     self.data_version)
             self._profiles[q.name] = entry
+        else:
+            assert entry[2] == self.data_version, \
+                f"stale profile served for {q.name}: cached at data " \
+                f"version {entry[2]}, store is at {self.data_version} — a " \
+                "write path skipped profile invalidation"
         return entry[1]
 
     def cached_result(self, q: Query,
                       ) -> Optional[Tuple[dict, qexec.ExecStats]]:
         """Bindings+stats of ``q`` if already executed at the current epoch
-        (bindings are layout-invariant; stats are valid per epoch). None on
-        a miss — the caller executes and ``store_result``s. Binding columns
-        and the stats are copied both into and out of the cache, so callers
-        mutating their result (or the original executor objects) can never
-        corrupt a later hit — a memcpy per column, still far below a
-        re-execution."""
+        (bindings are layout-invariant under moves/replication — NOT under
+        writes, which bump the epoch too; stats are valid per epoch). None
+        on a miss — the caller executes and ``store_result``s. Binding
+        columns and the stats are copied both into and out of the cache, so
+        callers mutating their result (or the original executor objects)
+        can never corrupt a later hit — a memcpy per column, still far
+        below a re-execution."""
         entry = self._results.get(q.name)
         if entry is not None and entry[0] == tuple(q.patterns):
+            assert entry[3] == self.epoch, \
+                f"stale result served for {q.name}: cached at epoch " \
+                f"{entry[3]}, layout is at {self.epoch} — a mutating path " \
+                "bumped the epoch without invalidating"
             self.result_hits += 1
             return ({v: c.copy() for v, c in entry[1].items()},
                     dataclasses.replace(entry[2]))
@@ -336,7 +392,7 @@ class PartitionedKG:
                      stats: qexec.ExecStats) -> None:
         self._results[q.name] = (tuple(q.patterns),
                                  {v: c.copy() for v, c in bindings.items()},
-                                 dataclasses.replace(stats))
+                                 dataclasses.replace(stats), self.epoch)
 
     def measure_candidate(self, cand: PartitionState,
                           queries: Sequence[Query], net=None,

@@ -12,7 +12,9 @@ internals are never reached into.
     kg = svc.bootstrap(ds.base_workload())
     bindings, stats = svc.query(ds.queries["Q9"])
     results = svc.query_batch(window)        # one dispatched batch per window
-    report = svc.maybe_adapt(new_queries)    # accepted plan -> svc.session
+    svc.insert(new_triples)                  # live writes, served next epoch
+    svc.delete(old_triples)                  # (safe mid-drain, fanned out
+    report = svc.maybe_adapt(new_queries)    #  to replica holders)
     svc.step()                               # apply one migration chunk
     svc.drain()                              # or finish the whole drain
 
@@ -29,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import write as kgwrite
 from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
 from repro.core.features import FeatureSpace
 from repro.core.migration import MigrationChunk
@@ -89,6 +92,7 @@ class KGService:
         self.kg: Optional[PartitionedKG] = None
         self.session: Optional[MigrationSession] = None   # in-flight drain
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
+        self.write_log = kgwrite.WriteLog()        # applied-mutation history
 
     @classmethod
     def from_dataset(cls, ds, n_shards: int,
@@ -157,6 +161,47 @@ class KGService:
             self.observe(q, stats.modeled_time(self.net))
         return results
 
+    # ------------------------------------------------------------------ #
+    # live writes (repro.write)
+    # ------------------------------------------------------------------ #
+    def insert(self, triples) -> kgwrite.WriteReport:
+        """Insert dictionary-encoded ``(s, p, o)`` triples into the live
+        graph. Safe while serving, while replicated, and while a migration
+        drain is in flight: rows are routed by the current primary
+        assignment, fanned out to every replica holder, and served from the
+        next epoch on (any cached plan/result of the old graph
+        invalidates). Already-present triples are no-ops."""
+        return self.write(kgwrite.WriteBatch(inserts=triples))
+
+    def delete(self, triples) -> kgwrite.WriteReport:
+        """Delete dictionary-encoded ``(s, p, o)`` triples from the live
+        graph — the write path's mirror image of :meth:`insert` (absent
+        triples are no-ops)."""
+        return self.write(kgwrite.WriteBatch(deletes=triples))
+
+    def fresh_ids(self, n: int = 1) -> np.ndarray:
+        """Mint ``n`` entity ids unused by any triple in the live graph —
+        subjects for new rows (``repro.write.fresh_entity_ids``; bulk
+        entity ids live past the dictionary, so ``Dictionary.encode`` on a
+        new term may collide with an existing entity)."""
+        assert self.kg is not None, "bootstrap() first"
+        return kgwrite.fresh_entity_ids(self.kg.store, n)
+
+    def write(self, batch: kgwrite.WriteBatch) -> kgwrite.WriteReport:
+        """Apply one :class:`repro.write.WriteBatch` (deletes first,
+        inserts win) and log it. The report is folded into the adaptive
+        controller's TM window (``note_writes``): write-born features join
+        the tracked universe and per-feature write heat accumulates — the
+        data-drift signal the next adaptation round's fanout pricing and
+        replica proposal consume."""
+        assert self.kg is not None, "bootstrap() first"
+        report = self.kg.apply_write(batch)
+        self.write_log.append(batch, report)
+        ctrl = self.controller
+        if ctrl is not None and report.effective:
+            ctrl.note_writes(report)
+        return report
+
     def run_workload(self, queries: Sequence[Query],
                      ) -> Tuple[Dict[str, float], Dict[str, qexec.ExecStats]]:
         """Batched measurement sweep (no TM recording): per-query modeled
@@ -215,7 +260,7 @@ class KGService:
             bytes_budget=self.migration_budget)
         ctrl = self.controller
         if report.accepted and ctrl is not None:
-            ctrl.exec_times.clear()            # fresh TM window post-migration
+            ctrl.clear_window()                # fresh TM window post-migration
             ctrl.reset_baseline(report.t_new)
         if self.migration_budget is None:
             session.drain()                    # atomic: commit-now behaviour
@@ -235,7 +280,7 @@ class KGService:
             # fully-migrated layout only (no spurious post-drain round)
             ctrl = self.controller
             if ctrl is not None:
-                ctrl.exec_times.clear()
+                ctrl.clear_window()
             self._times.clear()
         return chunk
 

@@ -57,6 +57,15 @@ class AdaptConfig:
     # this cap. Copy traffic counts toward the guard's migration cost;
     # replica-served shipping savings count toward its benefit. 0 = off.
     replica_budget: int = 0
+    # write-rate term (repro.write): every extra replica copy of a feature
+    # written w times per TM window costs w triple-payloads of recurring
+    # fanout traffic per window. The accept guard adds that per-window
+    # fanout delta (current map vs proposed map, priced at the network
+    # bandwidth and scaled by this weight) to the benefit side, and the
+    # replica proposal penalizes hot-written candidates by the same weight
+    # — so a hot-written feature becomes cheaper to demote than to keep
+    # replicated. 0 disables write-fanout pricing.
+    write_cost_weight: float = 1.0
 
 
 @dataclasses.dataclass
@@ -73,6 +82,9 @@ class AdaptReport:
     amortize_window: int = 0         # TM window the guard amortized over
     replicas: Optional[object] = None  # accepted target ReplicaMap (or None)
     replica_bytes: int = 0           # non-primary copy bytes under the target
+    # expected replica write-fanout traffic per TM window (bytes) under the
+    # layout the round returned — observed write heat x extra copies
+    fanout_bytes: int = 0
     # per-feature workload heat of this round (repr-suppressed array) — the
     # chunk priority, computed once here and reused by the session builder
     heat: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
@@ -108,6 +120,10 @@ class AWAPartController:
         self.exec_times: Dict[str, List[float]] = {}     # TM metadata
         self.state: Optional[PartitionState] = None
         self._baseline_avg: Optional[float] = None
+        # per-feature write touches this TM window (repro.write): the
+        # data-drift signal — feeds the guard's fanout pricing and the
+        # replica proposal's demotion penalty; cleared with the window
+        self.write_heat = np.zeros(space.n_features, dtype=np.float64)
 
     # ------------------------------------------------------------------ #
     # workload bookkeeping (QAFE + TM)
@@ -136,6 +152,40 @@ class AWAPartController:
         Clearing forces the next ``should_adapt`` to fire; setting it to the
         post-migration average starts a fresh monitoring window."""
         self._baseline_avg = value
+
+    def clear_window(self) -> None:
+        """Restart the TM window: runtime observations and write heat both
+        describe exactly one serving window, so whoever restarts the window
+        (accepted round, finished drain) clears them together."""
+        self.exec_times.clear()
+        if len(self.write_heat):
+            self.write_heat[:] = 0.0
+
+    def note_writes(self, report) -> None:
+        """Fold an applied ``repro.write.WriteReport`` into this window's
+        data-drift signal.
+
+        Features born on the write path (new predicates / new ``rdf:type``
+        classes) join the tracked state at the placement the facade chose —
+        keeping ``self.state`` aligned with the grown universe so the next
+        round's ``extend_for_space`` and migration planning stay
+        length-consistent. Each written feature's heat accumulates the rows
+        written; sizes are re-derived from the space at round time."""
+        if self.state is not None:
+            for fid, _key, shard in report.new_features:
+                if fid == len(self.state.feature_to_shard):
+                    self.state = PartitionState(
+                        np.append(self.state.feature_to_shard,
+                                  np.int32(shard)),
+                        np.append(self.state.feature_sizes, np.int64(0)),
+                        self.state.n_shards)
+        if len(self.write_heat) < self.space.n_features:
+            self.write_heat = np.pad(
+                self.write_heat,
+                (0, self.space.n_features - len(self.write_heat)))
+        for f, c in report.feature_writes.items():
+            if f < len(self.write_heat):
+                self.write_heat[f] += c
 
     # ------------------------------------------------------------------ #
     # clustering (lines 4-5)
@@ -321,15 +371,36 @@ class AWAPartController:
         # report) — computed exactly once per round
         heat = migration.feature_heat(self.space, queries)
 
+        # write heat over the grown universe (repro.write): rows written to
+        # each feature this TM window, scaled by the config's write-rate
+        # weight — priced wherever a replica copy would have to receive them
+        wh = self.write_heat
+        if len(wh) < self.space.n_features:
+            wh = np.pad(wh, (0, self.space.n_features - len(wh)))
+        wh = wh * float(getattr(cfg, "write_cost_weight", 1.0))
+
+        def _fanout_bytes(rmap) -> int:
+            """Expected per-window write-fanout traffic under a replica map:
+            every extra copy of a feature receives its writes too."""
+            if rmap is None or not rmap.has_replicas or not wh.any():
+                return 0
+            extra = np.maximum(rmap.n_copies() - 1, 0)
+            return int((extra * wh[:len(extra)]).sum()
+                       * migration.TRIPLE_BYTES)
+
         # replica promotion/demotion for the winning layout: hottest
         # workload features onto their remote readers' PPNs, greedy under
-        # the byte budget; features not re-proposed are demoted
+        # the byte budget; features not re-proposed are demoted. Hot-written
+        # features are penalized by their write heat — a copy whose
+        # recurring fanout outweighs its read savings is not proposed, which
+        # is exactly how a hot-written replica becomes a demotion candidate.
         rmap_new = None
         if replicas is not None:
             from repro import replicate
             rmap_new = replicate.propose_replicas(
                 self.space, new, queries,
-                int(getattr(cfg, "replica_budget", 0) or 0), heat=heat)
+                int(getattr(cfg, "replica_budget", 0) or 0), heat=heat,
+                write_heat=wh if wh.any() else None)
 
         dj_before = distributed_joins(stats, cur)
         dj_after = distributed_joins(stats, new)
@@ -341,17 +412,25 @@ class AWAPartController:
             t_new = measure(new, replicas=rmap_new)
         migration_s = 0.0
         window = 0
+        fan_base = _fanout_bytes(replicas)
+        fan_new = _fanout_bytes(rmap_new) if rmap_new is not None \
+            else fan_base
         if measure:
             gain = t_base - t_new
             if net is not None and (mplan.n_moves or mplan.n_replica_ops):
                 # migration-cost-aware guard: the destination must amortize
                 # the cost of getting there (moves AND replica copies) over
-                # the expected TM window
+                # the expected TM window. The write-fanout delta is a
+                # RECURRING per-window cost/saving entering the benefit side
+                # directly: dropping a hot-written copy saves its fanout
+                # every window from now on, keeping one keeps paying it.
                 migration_s = migration.migration_seconds(mplan, net)
                 window = self._expected_window(queries)
+                fan_gain_s = (fan_base - fan_new) / net.bandwidth_Bps
+                benefit = gain * window + fan_gain_s
                 # window == 0 means nothing to amortize over: savings can
                 # never pay for a positive migration cost, so reject
-                accepted = gain > 0 and gain * window >= migration_s
+                accepted = benefit > 0 and benefit >= migration_s
             else:
                 accepted = t_new < t_base                    # lines 25-27
         else:
@@ -367,6 +446,10 @@ class AWAPartController:
             dj_after=dj_after, t_base=t_base, t_new=t_new,
             n_clusters=n_clusters, chosen_cut=chosen_cut,
             migration_s=migration_s, amortize_window=window,
-            replicas=rmap_new, heat=heat,
+            replicas=rmap_new,
+            # chunk priority = read heat + write heat: a churn-hot feature
+            # should reach its destination as early as a read-hot one
+            heat=heat + wh,
             replica_bytes=(rmap_new.replica_bytes(new.feature_sizes)
-                           if rmap_new is not None else 0))
+                           if rmap_new is not None else 0),
+            fanout_bytes=fan_new if accepted else fan_base)

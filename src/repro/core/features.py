@@ -64,6 +64,13 @@ class FeatureSpace:
         self._tracked_po[self._pack(p, o)] = idx
         return idx
 
+    def track_p(self, p: int) -> int:
+        """Ensure predicate ``p`` has a P feature, returning its index.
+        The write path (``repro.write``) calls this when an insert carries a
+        predicate the store has never seen — features are otherwise derived
+        from the store's predicates at construction."""
+        return self._add(("P", int(p)))
+
     def track_workload(self, queries: Iterable[Query]) -> List[int]:
         """Track every constant-object (p, o) pattern in the workload."""
         added = []
@@ -80,6 +87,16 @@ class FeatureSpace:
 
     def key(self, idx: int) -> FeatureKey:
         return self._keys[idx]
+
+    def index_of(self, key: FeatureKey) -> int | None:
+        """Feature index of a key, or None if untracked (the key-based
+        translation ``repro.write.rebuild_from_scratch`` uses to map one
+        space's universe onto another's)."""
+        return self._index.get(tuple(key))
+
+    def feature_keys(self) -> List[FeatureKey]:
+        """All tracked keys, in feature-index order."""
+        return list(self._keys)
 
     def p_index(self, p: int) -> int:
         return self._index[("P", int(p))]

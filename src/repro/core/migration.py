@@ -238,29 +238,48 @@ def extend_for_space(state: PartitionState, space,
     The single place encoding the PO-split parent rule (a new PO feature
     inherits its parent P feature's shard) — both the controller's adapt
     round and the PartitionedKG facade go through it, so their extended
-    states are identical by construction. Returns (state, triple owners)."""
+    states are identical by construction. New *P* features (a predicate the
+    universe has never seen, born on the live write path before the owner
+    of this state absorbed it) have no parent to inherit from: parent -1
+    sends them to the least-loaded shard, matching the write path's own
+    placement rule. Returns (state, triple owners)."""
     old_nf = len(state.feature_to_shard)
     owners = space.triple_owners()
     sizes = space.feature_sizes(owners)
-    parents = [space.p_index(space.key(i)[1])
-               for i in range(old_nf, space.n_features)]
+    parents = []
+    for i in range(old_nf, space.n_features):
+        key = space.key(i)
+        parents.append(space.p_index(key[1]) if key[0] == "PO" else -1)
     return extend_state(state, sizes, parents), owners
 
 
 def extend_state(state: PartitionState, new_sizes: np.ndarray,
                  parent_of_new: List[int]) -> PartitionState:
-    """Grow a state with newly-tracked PO features.
+    """Grow a state with newly-tracked features.
 
     A new PO feature's triples already live on its parent P feature's shard
     (tracking splits ownership without moving data), so it inherits that
     shard; the parent's size shrinks accordingly — handled by passing the
-    re-computed ``new_sizes`` for the full (grown) feature universe.
-    """
+    re-computed ``new_sizes`` for the full (grown) feature universe. A
+    parent may itself be new (a PO child of a predicate born in the same
+    growth step): parents are resolved in creation order, so the child
+    reads the shard its parent was just assigned. Parent ``-1`` (a new P
+    feature, write path) places on the least-loaded shard."""
     f_old = len(state.feature_to_shard)
     f_new = len(new_sizes)
     assert f_new >= f_old and len(parent_of_new) == f_new - f_old
+    sizes = np.asarray(new_sizes, np.int64)
     f2s = np.empty(f_new, dtype=np.int32)
     f2s[:f_old] = state.feature_to_shard
+    loads = None
     for i, parent in enumerate(parent_of_new):
-        f2s[f_old + i] = state.feature_to_shard[parent]
-    return PartitionState(f2s, np.asarray(new_sizes, np.int64), state.n_shards)
+        if parent >= 0:
+            f2s[f_old + i] = f2s[parent]
+        else:
+            if loads is None:
+                loads = np.bincount(f2s[:f_old], weights=sizes[:f_old],
+                                    minlength=state.n_shards)
+            dst = int(np.argmin(loads))
+            f2s[f_old + i] = dst
+            loads[dst] += max(int(sizes[f_old + i]), 1)
+    return PartitionState(f2s, sizes, state.n_shards)

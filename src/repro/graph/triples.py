@@ -137,6 +137,46 @@ class TripleStore:
     def count(self, s: Optional[int], p: Optional[int], o: Optional[int]) -> int:
         return int(self.match_indices(s, p, o).shape[0])
 
+    # ------------------------------------------------------------------ #
+    # live mutation (repro.write)
+    # ------------------------------------------------------------------ #
+    def apply_mutation(self, inserts: np.ndarray,
+                       delete_rows: np.ndarray) -> np.ndarray:
+        """Mutate the store in place: drop the rows in ``delete_rows``
+        (global row ids), append ``inserts`` ((M, 3) int32 triples assumed
+        not already present), and rebuild the SPO/POS/OSP permutations.
+
+        Mutating *in place* is what keeps every holder of this store object
+        (``FeatureSpace.store``, ``KGService.store``, the facade and its
+        untouched shard views) consistent without re-wiring references.
+
+        Returns the old-row -> new-row remap, (N_old,) int64 with ``-1`` for
+        deleted rows. Surviving rows keep their relative order and inserts
+        append after them, so with no deletes the remap is the identity and
+        callers may skip re-indexing entirely.
+        """
+        delete_rows = np.asarray(delete_rows, dtype=np.int64)
+        inserts = np.asarray(inserts, dtype=np.int32).reshape(-1, 3)
+        n_old = self.n_triples
+        remap = np.arange(n_old, dtype=np.int64)
+        if len(delete_rows):
+            keep = np.ones(n_old, dtype=bool)
+            keep[delete_rows] = False
+            remap[~keep] = -1
+            remap[keep] = np.arange(int(keep.sum()), dtype=np.int64)
+            triples = self.triples[keep]
+        else:
+            triples = self.triples
+        if len(inserts):
+            triples = np.concatenate([triples, inserts])
+        if triples is not self.triples:
+            self.triples = np.ascontiguousarray(triples, dtype=np.int32)
+            self.spo = _sort_index(self.triples, (S, P, O))
+            self.pos = _sort_index(self.triples, (P, O, S))
+            self.osp = _sort_index(self.triples, (O, S, P))
+            self._sorted_views.clear()
+        return remap
+
 
 def build_store(triples: np.ndarray, dictionary: Dictionary) -> TripleStore:
     # drop duplicate triples (materialization can produce them)

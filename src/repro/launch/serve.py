@@ -10,10 +10,15 @@ serving. ``--experiment 1|2`` reproduces the paper's two evaluations,
 harness (``jax-pallas`` probes hash joins through the ``repro.kernels.join``
 Pallas kernels — see ``docs/kernels.md``), and
 ``--migration-budget BYTES`` throttles accepted migrations into a chunked
-``MigrationSession`` drained one chunk per serving window (default: atomic).
+``MigrationSession`` drained one chunk per serving window (default: atomic),
+and ``--writes-per-window N`` interleaves N synthetic live inserts
+(``repro.write``: fresh subjects carrying sampled (p, o) pairs, routed by
+primary and fanned out to replicas) ahead of every drain window — mixed
+read/write serving.
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
-      --experiment 1 --executor jax --migration-budget 1048576
+      --experiment 1 --executor jax --migration-budget 1048576 \
+      --writes-per-window 256
 """
 from __future__ import annotations
 
@@ -48,14 +53,36 @@ def build_system(universities: int, shards: int, seed: int = 0,
     return ds, svc
 
 
-def drive_migration(svc: KGService, window, verbose=True):
+def synthetic_writes(svc: KGService, n: int, rng):
+    """Insert ``n`` synthetic rows into the live graph: fresh subjects
+    (``svc.fresh_ids`` — entity ids live past the dictionary) carrying
+    (p, o) pairs sampled from existing triples, so the writes land across
+    the same features the workload reads. Returns the ``WriteReport``."""
+    t = svc.kg.store.triples
+    rows = t[rng.integers(0, len(t), n)].copy()
+    rows[:, 0] = svc.fresh_ids(n).astype(np.int32)
+    return svc.insert(rows)
+
+
+def drive_migration(svc: KGService, window, verbose=True,
+                    writes_per_window: int = 0, rng=None):
     """Drain a pending MigrationSession while continuing to serve: each
     ``query_batch`` window applies exactly one bounded chunk ahead of
-    serving, then executes against the updated hybrid layout. Returns
-    per-window average modeled query times observed during the drain."""
+    serving, then executes against the updated hybrid layout; with
+    ``writes_per_window`` > 0, that many synthetic live inserts land ahead
+    of every window (mixed read/write serving — later chunks carry the
+    post-write rows). Returns per-window average modeled query times
+    observed during the drain."""
     averages = []
     session = svc.session
+    if writes_per_window and rng is None:
+        rng = np.random.default_rng(0)
     while svc.session is not None:
+        wrote = ""
+        if writes_per_window:
+            rep = synthetic_writes(svc, writes_per_window, rng)
+            wrote = (f" | +{rep.n_inserted} rows on shards "
+                     f"{rep.touched_shards}")
         results = svc.query_batch(window)       # serve + one chunk
         avg = float(np.mean([st.modeled_time(svc.net)
                              for _, st in results]))
@@ -64,11 +91,12 @@ def drive_migration(svc: KGService, window, verbose=True):
             print(f"[migrate] window {len(averages) - 1}: "
                   f"avg {avg * 1e3:6.1f} ms | epoch {svc.kg.epoch} | "
                   f"{session.applied}/{session.n_chunks} chunks, "
-                  f"{session.bytes_applied / 1e6:.2f} MB migrated")
+                  f"{session.bytes_applied / 1e6:.2f} MB migrated{wrote}")
     return averages
 
 
-def experiment1(ds, svc: KGService, verbose=True):
+def experiment1(ds, svc: KGService, verbose=True,
+                writes_per_window: int = 0):
     """Workload-composition change: 14 base queries -> +10 new queries."""
     kg = svc.bootstrap(ds.base_workload())
     extended = ds.extended_workload()
@@ -89,7 +117,8 @@ def experiment1(ds, svc: KGService, verbose=True):
             print(f"[exp1] migration session: {svc.session.n_chunks} chunks "
                   f"of <= {svc.migration_budget} B "
                   f"({report.plan.summary()})")
-        drive_migration(svc, extended, verbose=verbose)
+        drive_migration(svc, extended, verbose=verbose,
+                        writes_per_window=writes_per_window)
     t_adapt, s_adapt = svc.run_workload(extended)
     if verbose:
         _print_exp(t_initial, t_adapt, s_initial, s_adapt, report)
@@ -99,7 +128,8 @@ def experiment1(ds, svc: KGService, verbose=True):
 
 
 def experiment2(ds, svc: KGService, hot_query: str = "Q1",
-                hot_share: float = 0.5, verbose=True):
+                hot_share: float = 0.5, verbose=True,
+                writes_per_window: int = 0):
     """Frequency change: hot_query becomes hot_share of the workload."""
     base = ds.base_workload()
     svc.bootstrap(base)
@@ -118,7 +148,8 @@ def experiment2(ds, svc: KGService, hot_query: str = "Q1",
 
     report = svc.adapt(biased)
     if svc.session is not None:        # throttled: drain while serving
-        drive_migration(svc, biased, verbose=verbose)
+        drive_migration(svc, biased, verbose=verbose,
+                        writes_per_window=writes_per_window)
     t1 = svc.workload_average_time(biased)
     if verbose:
         print(f"[exp2] biased-workload avg: initial {t0*1e3:.1f} ms -> "
@@ -163,6 +194,10 @@ def main() -> None:
                     help="bytes of read-replica copies the adaptation may "
                          "pin onto remote readers' shards (default: no "
                          "replication)")
+    ap.add_argument("--writes-per-window", type=int, default=0,
+                    help="synthetic live inserts ahead of every drain "
+                         "window (repro.write; needs --migration-budget "
+                         "to produce multiple windows)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
@@ -178,9 +213,11 @@ def main() -> None:
           f"{args.shards} shards, strategy={svc.partitioner.name}, "
           f"executor={svc.executor.name}")
     if args.experiment == 1:
-        out = experiment1(ds, svc)
+        out = experiment1(ds, svc,
+                          writes_per_window=args.writes_per_window)
     else:
-        out = experiment2(ds, svc)
+        out = experiment2(ds, svc,
+                          writes_per_window=args.writes_per_window)
     if args.show_federated:
         state = out["state"]
         q = ds.queries["Q9"]

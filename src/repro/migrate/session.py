@@ -121,11 +121,17 @@ class MigrationSession:
         self.bytes_applied += chunk.bytes
         self.epochs.append(self.kg.epoch)
         if self.done:
-            assert np.array_equal(self.kg.state.feature_to_shard,
+            # compare the target's universe only: live writes during the
+            # drain may have grown the feature universe (repro.write), and
+            # write-born features stay wherever the write path placed them
+            # — the session owns exactly the features its target knows
+            nf = len(self.target.feature_to_shard)
+            assert np.array_equal(self.kg.state.feature_to_shard[:nf],
                                   self.target.feature_to_shard), \
                 "drained session must land exactly on the target layout"
             assert self.target_replicas is None or np.array_equal(
-                self.kg.replicas.masks, self.target_replicas.masks), \
+                self.kg.replicas.masks[:len(self.target_replicas.masks)],
+                self.target_replicas.masks), \
                 "drained session must land exactly on the target replicas"
         return chunk
 

@@ -539,7 +539,12 @@ def profile_from_plan(plan: qplan.QueryPlan, store,
     """One real execution of ``plan`` against the global store, recording the
     layout-invariant artifacts (matched row ids, join-pipeline counts).
     ``max_join_rows`` should match the serving executor's cap so profiling
-    never rejects a workload the executor was configured to allow."""
+    never rejects a workload the executor was configured to allow.
+
+    The recorded row ids index the store *as it is now*: a live write
+    (``repro.write``) compacts/appends rows, so profiles are valid per
+    facade ``data_version`` — ``PartitionedKG.profile`` re-derives after
+    any effective mutation rather than serving remapped-out ids."""
     prof = qplan.QueryProfile(pattern_rows=[], join_rows=0, rows=0,
                               n_patterns=plan.n_patterns)
     stats = ExecStats()

@@ -17,8 +17,13 @@ anything holding the triples the query will run over:
   (federated plan: PPN choice + per-pattern home-shard annotations).
 
 ``PartitionedKG`` caches one plan per ``(query, store)`` and invalidates the
-cache when the layout changes (``commit`` / ``sync_universe``), so a whole
-adaptation round builds each query's plan exactly once.
+cache when the layout changes (``commit`` / ``sync_universe``) — and when
+the *graph* changes: a live write (``repro.write.apply_batch``) bumps the
+facade epoch too, since plan selectivities, the PPN vote, and home-shard
+annotations were all derived from pre-write matches. Every cached plan
+carries the epoch it was built at and asserts on a stale hit. So a whole
+adaptation round builds each query's plan exactly once, and no plan ever
+outlives the graph it described.
 """
 from __future__ import annotations
 
@@ -190,7 +195,14 @@ class QueryProfile:
     derived once per plan (one real execution worth of work against the
     global store, see ``exec.profile_from_plan``) and then prices any
     candidate ``PartitionState`` with pure bincount arithmetic via
-    :func:`stats_from_profile`."""
+    :func:`stats_from_profile`.
+
+    Layout-invariant is not *write*-invariant: ``pattern_rows`` holds
+    global row ids, which a ``repro.write`` mutation remaps (deletes
+    compact the store, inserts append). The facade therefore tags cached
+    profiles with its ``data_version`` and drops them on every effective
+    write — a profile never prices a graph other than the one it was
+    profiled on."""
     pattern_rows: List[np.ndarray]     # global row ids per executed op
     join_rows: int
     rows: int

@@ -151,7 +151,8 @@ class ReplicaMap:
 
 def propose_replicas(space, state: PartitionState, queries: Sequence,
                      budget_bytes: int, *,
-                     heat: np.ndarray | None = None) -> ReplicaMap:
+                     heat: np.ndarray | None = None,
+                     write_heat: np.ndarray | None = None) -> ReplicaMap:
     """Workload-aware replica set for ``state``, greedy under a byte budget.
 
     Candidates are ``(feature, shard)`` pairs where some query's PPN reads
@@ -162,7 +163,15 @@ def propose_replicas(space, state: PartitionState, queries: Sequence,
     longer fit the remaining budget are skipped so smaller hot features can
     still fill it. Features not selected hold only their primary copy —
     demotion of cold replicas is implicit in rebuilding the map fresh each
-    round."""
+    round.
+
+    ``write_heat`` (rows written per feature this TM window, already scaled
+    by the caller's write-rate weight — see ``AdaptConfig.write_cost_weight``)
+    turns the order write-aware: a copy of a written feature must receive
+    every write too, so promotion ranks by *net* heat (read minus write) and
+    a candidate whose recurring fanout outweighs its read demand is never
+    proposed — the accept guard then prices dropping the existing copy as a
+    per-window saving. None keeps the read-only behaviour bit-identical."""
     rmap = ReplicaMap.primary_only(state)
     budget = int(budget_bytes or 0)
     queries = list(queries)
@@ -172,6 +181,12 @@ def propose_replicas(space, state: PartitionState, queries: Sequence,
 
     if heat is None:
         heat = feature_heat(space, queries)
+    net_heat = np.asarray(heat, np.float64)
+    if write_heat is not None:
+        wh = np.zeros(len(net_heat))
+        wh[:min(len(net_heat), len(write_heat))] = \
+            write_heat[:min(len(net_heat), len(write_heat))]
+        net_heat = net_heat - wh
     sizes = np.asarray(state.feature_sizes, np.int64)
     demand: Dict[Tuple[int, int], float] = {}
     for q in queries:
@@ -180,10 +195,12 @@ def propose_replicas(space, state: PartitionState, queries: Sequence,
             if int(state.feature_to_shard[f]) != ppn:
                 key = (int(f), int(ppn))
                 demand[key] = demand.get(key, 0.0) + q.frequency
-    order = sorted(demand, key=lambda fs: (-float(heat[fs[0]]),
+    order = sorted(demand, key=lambda fs: (-float(net_heat[fs[0]]),
                                            -demand[fs], fs))
     spent = 0
     for f, s in order:
+        if write_heat is not None and net_heat[f] <= 0:
+            continue           # fanout eats the read savings: don't promote
         cost = int(sizes[f]) * TRIPLE_BYTES
         if cost <= 0 or rmap.has(f, s) or spent + cost > budget:
             continue

@@ -1,0 +1,510 @@
+"""repro.write: live insert/delete mechanics, routing + replica fanout,
+stale-cache epoch discipline, write-aware adaptation pricing, and the
+interleaved-mutations acceptance property (writes/queries/migration chunks
+byte-identical to a rebuild-from-scratch PartitionedKG at every epoch, on
+all executors and replicated layouts)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+from test_executors import _random_dataset, _random_query
+from test_replication import _random_replicas
+
+from repro import write as kgwrite
+from repro.api import (KGService, MigrationSession, PartitionedKG,
+                       WriteBatch)
+from repro.core import migration
+from repro.core.adaptive import AdaptConfig, AWAPartController
+from repro.core.features import FeatureSpace
+from repro.core.partition import PartitionState, hash_partition
+from repro.graph.triples import Dictionary, build_store
+from repro.query import exec as qexec
+from repro.query.pattern import Query, var
+from repro.replicate import ReplicaMap, propose_replicas
+
+
+def _tiny_kg(n_shards=3, replicas=None):
+    """4 predicates x hand-placed features, deterministic layout."""
+    d = Dictionary()
+    for i in range(30):
+        d.encode(f"t{i}")
+    rng = np.random.default_rng(7)
+    t = np.stack([rng.integers(0, 20, 120), rng.integers(0, 4, 120),
+                  rng.integers(0, 20, 120)], axis=1).astype(np.int32)
+    store = build_store(t, d)
+    space = FeatureSpace(store)
+    state = hash_partition(space.feature_sizes(), n_shards, 0)
+    return PartitionedKG(store, space, state, replicas=replicas)
+
+
+def _assert_matches_rebuild(kg, queries, ctx=""):
+    """Live facade == rebuild-from-scratch oracle: identical bindings and
+    comparable ExecStats on every backend."""
+    twin = kgwrite.rebuild_from_scratch(kg)
+    nx = qexec.NumpyExecutor()
+    refs = [nx.run(twin.plan(q), twin) for q in queries]
+    execs = [nx, qexec.JaxExecutor(),
+             qexec.JaxExecutor(pallas=True, probe_kernel=True)]
+    plans = [kg.plan(q) for q in queries]
+    for ex in execs:
+        for q, (b, s), (rb, rs) in zip(queries, ex.run_batch(plans, kg),
+                                       refs):
+            assert canon_bindings(b) == canon_bindings(rb), \
+                (ctx, q.name, ex.name, kg.epoch)
+            for f in qexec.ExecStats.COMPARABLE:
+                assert getattr(s, f) == getattr(rs, f), \
+                    (ctx, q.name, ex.name, f, kg.epoch)
+
+
+# --------------------------------------------------------------------------- #
+# WriteBatch / TripleStore mutation mechanics
+# --------------------------------------------------------------------------- #
+
+def test_write_batch_normalizes_and_dedups():
+    batch = WriteBatch(inserts=[(1, 2, 3), (1, 2, 3), (4, 5, 6)],
+                       deletes=np.array([[7, 8, 9]]))
+    assert batch.inserts.shape == (2, 3)
+    assert batch.inserts.dtype == np.int32
+    assert batch.deletes.shape == (1, 3)
+    assert batch.n_ops == 3
+    empty = WriteBatch()
+    assert empty.inserts.shape == (0, 3) and empty.n_ops == 0
+
+
+def test_triple_store_apply_mutation_remap():
+    d = Dictionary()
+    t = np.array([[0, 1, 2], [3, 4, 5], [6, 7, 8]], np.int32)
+    store = build_store(t, d)
+    # delete the middle row, append one
+    remap = store.apply_mutation(np.array([[9, 9, 9]], np.int32),
+                                 np.array([1], np.int64))
+    assert np.array_equal(remap, [0, -1, 1])
+    assert store.n_triples == 3
+    assert store.count(9, 9, 9) == 1 and store.count(3, 4, 5) == 0
+    # indexes rebuilt: pattern lookups still see a consistent store
+    assert store.count(None, 7, None) == 1
+    # pure-insert mutation: identity remap over survivors
+    remap2 = store.apply_mutation(np.array([[1, 1, 1]], np.int32),
+                                  np.empty(0, np.int64))
+    assert np.array_equal(remap2, np.arange(3))
+    assert store.n_triples == 4
+
+
+def test_insert_delete_set_semantics():
+    kg = _tiny_kg()
+    existing = kg.store.triples[5].tolist()
+    n0 = kg.store.n_triples
+    # delete + re-insert the same triple in one batch: net no-op x2
+    rep = kg.apply_write(WriteBatch(inserts=[existing], deletes=[existing]))
+    assert not rep.effective and rep.n_redundant == 2
+    assert kg.store.n_triples == n0 and kg.epoch == 0
+    # delete + insert of an ABSENT triple: pure insert (insert wins)
+    rep = kg.apply_write(WriteBatch(inserts=[[25, 1, 25]],
+                                    deletes=[[25, 1, 25]]))
+    assert rep.n_inserted == 1 and rep.n_deleted == 0
+    assert kg.store.count(25, 1, 25) == 1
+    # inserting it again is redundant; deleting it works
+    rep = kg.apply_write(WriteBatch(inserts=[[25, 1, 25]]))
+    assert not rep.effective
+    rep = kg.apply_write(WriteBatch(deletes=[[25, 1, 25]]))
+    assert rep.n_deleted == 1 and kg.store.count(25, 1, 25) == 0
+
+
+def test_write_routes_by_primary_and_fans_out_to_replicas():
+    d = Dictionary()
+    for i in range(10):
+        d.encode(f"t{i}")
+    t = np.array([[0, 0, 1], [1, 0, 2], [2, 1, 3]], np.int32)
+    store = build_store(t, d)
+    space = FeatureSpace(store)
+    f0, f1 = space.p_index(0), space.p_index(1)
+    state = PartitionState(np.array([0, 1], np.int32),
+                           space.feature_sizes(), 3)
+    rmap = ReplicaMap.primary_only(state)
+    rmap.add(f0, 2)                       # p=0 replicated onto shard 2
+    kg = PartitionedKG(store, space, state, replicas=rmap)
+    shards0 = [len(v.triples) for v in kg.shards]
+
+    rep = kg.apply_write(WriteBatch(inserts=[[5, 0, 6]]))
+    # routed to p=0's primary (shard 0) AND its replica holder (shard 2)
+    assert rep.touched_shards == [0, 2]
+    assert rep.fanout_copies == 1
+    assert rep.fanout_bytes == migration.TRIPLE_BYTES
+    assert rep.feature_writes == {f0: 1}
+    shards1 = [len(v.triples) for v in kg.shards]
+    assert shards1[0] == shards0[0] + 1          # primary copy
+    assert shards1[2] == shards0[2] + 1          # replica copy
+    assert shards1[1] == shards0[1]              # untouched shard kept
+    # the copy is byte-identical on both holders
+    assert kg.store.count(5, 0, 6) == 1
+    rows_new = np.flatnonzero(
+        (kg.store.triples == np.array([5, 0, 6], np.int32)).all(1))
+    assert rows_new[0] in kg.shard_rows(0)
+    assert rows_new[0] in kg.shard_rows(2)
+
+    # deleting fans out the same way
+    rep = kg.apply_write(WriteBatch(deletes=[[5, 0, 6]]))
+    assert rep.touched_shards == [0, 2] and rep.fanout_copies == 1
+    assert [len(v.triples) for v in kg.shards] == shards0
+
+
+def test_untouched_shard_views_are_reused():
+    kg = _tiny_kg(n_shards=3)
+    _ = kg.shards                        # materialize all views
+    rebuilds0 = kg.view_rebuilds
+    row = kg.store.triples[0]
+    f = int(kg.owners[0])
+    home = int(kg.state.feature_to_shard[f])
+    rep = kg.apply_write(WriteBatch(inserts=[[21, int(row[1]), 22]]))
+    assert rep.touched_shards == [home]
+    _ = kg.shards
+    # exactly the touched shard re-materialized
+    assert kg.view_rebuilds == rebuilds0 + 1
+
+
+def test_new_predicate_creates_feature_least_loaded():
+    kg = _tiny_kg(n_shards=3)
+    nf0 = kg.space.n_features
+    least = int(np.argmin(kg.shard_sizes()))
+    rep = kg.apply_write(WriteBatch(inserts=[[1, 99, 2], [3, 99, 4]]))
+    assert len(rep.new_features) == 1
+    fid, key, shard = rep.new_features[0]
+    assert fid == nf0 and key == ("P", 99) and shard == least
+    assert len(kg.state.feature_to_shard) == kg.space.n_features
+    assert int(kg.state.feature_sizes[fid]) == 2
+    assert kg.replicas.n_features == kg.space.n_features
+    # queries over the new feature serve correctly, rebuild agrees
+    q = Query(name="newp", patterns=((var(0), 99, var(1)),))
+    _assert_matches_rebuild(kg, [q], "new-predicate")
+
+
+def test_new_type_class_splits_po_feature():
+    ds_type = 2                          # treat p=2 as rdf:type
+    d = Dictionary()
+    for i in range(10):
+        d.encode(f"t{i}")
+    t = np.array([[0, 2, 5], [1, 2, 5], [3, 0, 4]], np.int32)
+    store = build_store(t, d)
+    space = FeatureSpace(store, type_predicate=ds_type)
+    state = hash_partition(space.feature_sizes(), 2, 0)
+    kg = PartitionedKG(store, space, state)
+    parent = space.p_index(ds_type)
+    # a never-seen class: tracked PO child on the parent P's shard
+    rep = kg.apply_write(WriteBatch(inserts=[[7, 2, 9]]))
+    assert len(rep.new_features) == 1
+    fid, key, shard = rep.new_features[0]
+    assert key == ("PO", 2, 9)
+    assert shard == int(kg.state.feature_to_shard[parent])
+    assert kg.space.po_index(2, 9) == fid
+    q = Query(name="cls", patterns=((var(0), 2, 9),))
+    _assert_matches_rebuild(kg, [q], "new-class")
+
+
+def test_feature_sizes_stay_exact_under_writes():
+    kg = _tiny_kg()
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        ins = np.stack([rng.integers(0, 25, 7), rng.integers(0, 5, 7),
+                        rng.integers(0, 25, 7)], axis=1).astype(np.int32)
+        dels = kg.store.triples[rng.integers(0, kg.store.n_triples, 4)]
+        kg.apply_write(WriteBatch(inserts=ins, deletes=dels))
+        derived = kg.space.feature_sizes(kg.owners)
+        assert np.array_equal(kg.state.feature_sizes, derived)
+        assert int(kg.state.feature_sizes.sum()) == kg.store.n_triples
+        assert sum(kg.shard_sizes()) == kg.store.n_triples
+
+
+# --------------------------------------------------------------------------- #
+# stale-cache hazard: every mutating path bumps the epoch first
+# --------------------------------------------------------------------------- #
+
+def test_write_between_query_and_cached_repeat(small_lubm):
+    """Regression: a write landing between ``query`` and a cached repeat
+    must invalidate the cached result — the repeat re-executes and sees
+    the new rows."""
+    svc = KGService.from_dataset(small_lubm, 4)
+    kg = svc.bootstrap(small_lubm.base_workload())
+    d = small_lubm.dictionary
+    q = small_lubm.queries["Q1"]
+    before, _ = svc.query(q)
+    hits0 = kg.result_hits
+    _, _ = svc.query(q)
+    assert kg.result_hits == hits0 + 1           # served from cache
+
+    take = d.lookup("ub:takesCourse")
+    cls = d.lookup("ub:GraduateStudent")
+    tp = d.lookup("rdf:type")
+    s = int(svc.fresh_ids(1)[0])         # entity ids live past the dictionary
+    rep = svc.insert([[s, tp, cls], [s, take, small_lubm.named.grad_course0]])
+    assert rep.effective and kg.epoch > 0
+
+    after, _ = svc.query(q)                      # cached repeat? no: epoch moved
+    assert kg.result_hits == hits0 + 1           # re-executed, not served
+    assert len(after[var(0)]) == len(before[var(0)]) + 1
+    # deleting restores the original result (epoch bumps again)
+    svc.delete([[s, take, small_lubm.named.grad_course0]])
+    restored, _ = svc.query(q)
+    assert canon_bindings(restored) == canon_bindings(before)
+
+
+def test_every_mutating_path_bumps_epoch_before_cache_serves():
+    kg = _tiny_kg(n_shards=3)
+    q = Query(name="q", patterns=((var(0), 0, var(1)),))
+    nx = qexec.NumpyExecutor()
+
+    def serve():
+        hit = kg.cached_result(q)
+        if hit is None:
+            hit = nx.run(kg.plan(q), kg)
+            kg.store_result(q, *hit)
+        return hit
+
+    epochs = [kg.epoch]
+
+    def mutated(ctx):
+        assert kg.epoch > epochs[-1], f"{ctx} did not bump the epoch"
+        epochs.append(kg.epoch)
+        hits = kg.result_hits
+        serve()
+        assert kg.result_hits == hits, f"{ctx} served a stale result"
+
+    serve()
+    f = int(kg.owners[0])
+    src = int(kg.state.feature_to_shard[f])
+    dst = (src + 1) % 3
+    kg.apply_chunk(migration.MigrationChunk(
+        moves=[(f, src, dst)], n_triples=1, bytes=12))
+    mutated("apply_chunk(move)")
+    kg.apply_chunk(migration.MigrationChunk(
+        moves=[], n_triples=0, bytes=0, replica_adds=[(f, dst, src)]))
+    mutated("apply_chunk(replica add)")
+    kg.apply_chunk(migration.MigrationChunk(
+        moves=[], n_triples=0, bytes=0, replica_drops=[(f, src)]))
+    mutated("apply_chunk(replica drop)")
+    kg.apply_write(WriteBatch(inserts=[[26, 0, 27]]))
+    mutated("apply_write(insert)")
+    kg.apply_write(WriteBatch(deletes=[[26, 0, 27]]))
+    mutated("apply_write(delete)")
+    target = kg.state.copy()
+    target.feature_to_shard[f] = src
+    kg.commit(target)
+    mutated("commit")
+
+
+def test_stale_cache_tripwire_asserts():
+    """The epoch tags are a tripwire: serving a cache entry after an
+    un-invalidated epoch bump fails loudly instead of returning stale
+    data. (Simulates a hypothetical buggy mutation path — every real path
+    invalidates, as the test above proves.)"""
+    kg = _tiny_kg()
+    q = Query(name="q", patterns=((var(0), 0, var(1)),))
+    res = qexec.NumpyExecutor().run(kg.plan(q), kg)
+    kg.store_result(q, *res)
+    kg.profile(q)                        # cache the profile at data_version 0
+    kg.epoch += 1                        # buggy path: bump without invalidate
+    with pytest.raises(AssertionError, match="stale result"):
+        kg.cached_result(q)
+    with pytest.raises(AssertionError, match="stale plan"):
+        kg.plan(q)
+    kg.data_version += 1                 # buggy write: no profile invalidate
+    with pytest.raises(AssertionError, match="stale profile"):
+        kg.profile(q)
+
+
+# --------------------------------------------------------------------------- #
+# write-aware adaptation: heat, fanout pricing, demotion
+# --------------------------------------------------------------------------- #
+
+def test_service_folds_writes_into_controller_window(small_lubm):
+    svc = KGService.from_dataset(small_lubm, 4)
+    svc.bootstrap(small_lubm.base_workload())
+    ctrl = svc.controller
+    d = small_lubm.dictionary
+    take = d.lookup("ub:takesCourse")
+    # the workload tracks PO(takesCourse, grad_course0) — writes to that
+    # (p, o) pair are owned by (and heat) the tracked fine-grained feature
+    f = svc.space.po_index(take, small_lubm.named.grad_course0)
+    assert f is not None
+    s = int(svc.fresh_ids(1)[0])
+    rep = svc.insert([[s, take, small_lubm.named.grad_course0]])
+    assert rep.feature_writes == {f: 1}
+    assert ctrl.write_heat[f] == 1
+    assert len(svc.write_log) == 1
+    # new predicate: controller state grows with the facade's placement
+    nf0 = len(ctrl.state.feature_to_shard)
+    rep = svc.insert([[1, d.encode("ex:newPred"), 2]])
+    fid, _, shard = rep.new_features[0]
+    assert len(ctrl.state.feature_to_shard) == nf0 + 1
+    assert int(ctrl.state.feature_to_shard[fid]) == shard
+    assert ctrl.write_heat[fid] == 1
+    # window restart clears write heat with exec times
+    ctrl.clear_window()
+    assert not ctrl.write_heat.any() and not ctrl.exec_times
+
+
+def test_propose_replicas_write_penalty(small_lubm, space):
+    workload = small_lubm.base_workload()
+    space.track_workload(workload)
+    state = hash_partition(space.feature_sizes(), 4, 0)
+    base = propose_replicas(space, state, workload, 1 << 20)
+    reps = base.replicated()
+    assert len(reps)                     # read-hot features got copies
+    # hammering every proposed feature with writes suppresses promotion
+    wh = np.zeros(space.n_features)
+    wh[reps] = 1e9
+    hot = propose_replicas(space, state, workload, 1 << 20,
+                           write_heat=wh)
+    assert not set(hot.replicated().tolist()) & set(reps.tolist())
+    # zero write heat: bit-identical to the read-only proposal
+    cold = propose_replicas(space, state, workload, 1 << 20,
+                            write_heat=np.zeros(space.n_features))
+    assert cold == base
+
+
+def test_guard_prices_write_fanout_and_demotes(small_lubm):
+    """Flat measured objective isolates the fanout term: with write heat on
+    every replicated feature, the round drops the copies (recurring fanout
+    saving, free drops) — with write_cost_weight=0 it keeps them."""
+    def run(weight):
+        space = FeatureSpace(
+            small_lubm.store,
+            type_predicate=small_lubm.dictionary.lookup("rdf:type"))
+        workload = small_lubm.base_workload()
+        space.track_workload(workload)
+        cfg = AdaptConfig(replica_budget=1 << 20, amortize_window=10,
+                          write_cost_weight=weight)
+        ctrl = AWAPartController(space, 4, cfg)
+        state = ctrl.initial_partition(workload)
+        replicas = propose_replicas(space, state, workload,
+                                    cfg.replica_budget)
+        assert replicas.has_replicas
+        # pin the layout: the round may only touch replicas
+        orig = ctrl._assign
+
+        def assign_fixed(queries, base, cut=None):
+            _new, stats, ncl = orig(queries, base, cut=cut)
+            return base.copy(), stats, ncl
+        ctrl._assign = assign_fixed
+        ctrl.write_heat = np.zeros(space.n_features)
+        ctrl.write_heat[replicas.replicated()] = 1e6
+        _, report = ctrl.adapt(
+            [], measure=lambda cand, replicas=None: 1.0,
+            net=qexec.NetworkModel(), replicas=replicas)
+        return replicas, report
+
+    replicas, report = run(weight=1.0)
+    assert report.accepted
+    assert report.replicas is not None
+    assert not (set(report.replicas.replicated().tolist())
+                & set(replicas.replicated().tolist()))
+    assert report.fanout_bytes == 0      # nothing hot-written stays copied
+    assert report.plan.replica_drops     # the demotions ride the plan
+
+    replicas0, report0 = run(weight=0.0)
+    # fanout priced at zero: flat objective, nothing to gain -> rejected,
+    # the served copies stay exactly as they were
+    assert not report0.accepted and report0.replicas is None
+
+
+def test_extend_state_places_writeborn_p_features_least_loaded():
+    state = PartitionState(np.array([0, 0, 1], np.int32),
+                           np.array([10, 10, 1], np.int64), 3)
+    # one PO child of feature 1, one parentless (write-born P) feature
+    grown = migration.extend_state(
+        state, np.array([10, 7, 1, 3, 5], np.int64), [1, -1])
+    assert int(grown.feature_to_shard[3]) == 0      # inherits parent's shard
+    assert int(grown.feature_to_shard[4]) == 2      # least-loaded shard
+    assert grown.n_shards == 3
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance property: interleavings == rebuild-from-scratch
+# --------------------------------------------------------------------------- #
+
+def _random_batch(rng, kg):
+    """Random mutation mix: fresh rows (sometimes new predicates), duplicate
+    inserts, deletes of present and absent triples."""
+    n_ins = int(rng.integers(0, 12))
+    n_del = int(rng.integers(0, 8))
+    ins = np.stack([rng.integers(0, 45, n_ins),
+                    rng.integers(0, 8, n_ins),      # preds 6/7 are new
+                    rng.integers(0, 45, n_ins)],
+                   axis=1).astype(np.int32).reshape(-1, 3)
+    if n_ins and rng.random() < 0.5:    # sprinkle redundant inserts
+        ins = np.concatenate(
+            [ins, kg.store.triples[rng.integers(0, kg.store.n_triples, 2)]])
+    dels = kg.store.triples[
+        rng.integers(0, kg.store.n_triples, n_del)].copy().reshape(-1, 3)
+    if n_del and rng.random() < 0.5:    # sprinkle absent deletes
+        dels = np.concatenate([dels, np.array([[99, 99, 99]], np.int32)])
+    return WriteBatch(inserts=ins, deletes=dels)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_interleaved_writes_queries_chunks_match_rebuild(seed):
+    """THE acceptance property: random interleavings of inserts, deletes,
+    queries and migration chunks (with replica ops in flight) serve
+    byte-identically to a rebuild-from-scratch PartitionedKG at every
+    epoch, on numpy, jax and jax-pallas."""
+    rng = np.random.default_rng(seed)
+    store, space = _random_dataset(rng, n_triples=300)
+    sizes = space.feature_sizes()
+    n_shards = 4
+    state = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    target = hash_partition(sizes, n_shards, seed=int(rng.integers(1 << 16)))
+    kg = PartitionedKG(store, space, state.copy(),
+                       replicas=_random_replicas(rng, state))
+    target_replicas = _random_replicas(rng, target)
+    queries = [_random_query(rng, store, name=f"R{i}") for i in range(3)]
+    budget = max(int(sizes.sum()) * migration.TRIPLE_BYTES // 4, 1)
+    session = MigrationSession(kg, target, bytes_budget=budget,
+                               target_replicas=target_replicas)
+
+    epochs = {kg.epoch}
+    _assert_matches_rebuild(kg, queries, f"seed={seed} pre")
+    for step in range(6):
+        action = rng.random()
+        if action < 0.55:
+            kg.apply_write(_random_batch(rng, kg))
+        elif not session.done:
+            session.step()
+        epochs.add(kg.epoch)
+        _assert_matches_rebuild(kg, queries, f"seed={seed} step={step}")
+    session.drain()                      # mid-write universe growth is fine
+    _assert_matches_rebuild(kg, queries, f"seed={seed} drained")
+    nf = len(target.feature_to_shard)
+    assert np.array_equal(kg.state.feature_to_shard[:nf],
+                          target.feature_to_shard)
+    assert np.array_equal(
+        kg.replicas.masks[:len(target_replicas.masks)],
+        target_replicas.masks)
+    assert len(kg.state.feature_to_shard) == kg.space.n_features
+
+
+def test_service_writes_during_drain(small_lubm):
+    """Service-level: insert/delete interleaved with query_batch windows
+    while a budgeted drain is in flight; post-write rows ride later chunks
+    and the final layout equals the accepted target."""
+    svc = KGService.from_dataset(small_lubm, 4, migration_budget=150_000,
+                                 replica_budget=200_000)
+    svc.bootstrap(small_lubm.base_workload())
+    window = small_lubm.workload(["Q1", "Q2", "Q9", "EQ1", "EQ4"])
+    svc.query_batch(window)
+    report = svc.adapt(small_lubm.workload(
+        [f"EQ{i}" for i in range(1, 11)]))
+    assert report.accepted and svc.session is not None
+    t = svc.store.triples
+    rng = np.random.default_rng(1)
+    inserted = 0
+    while svc.session is not None:
+        rows = t[rng.integers(0, len(t), 32)].copy()
+        rows[:, 0] = svc.fresh_ids(len(rows)).astype(np.int32)
+        inserted += svc.insert(rows).n_inserted
+        svc.delete(rows[:8])
+        svc.query_batch(window)          # drains one chunk per window
+    assert inserted > 0
+    assert svc.write_log.n_inserted - svc.write_log.n_deleted > 0
+    _assert_matches_rebuild(svc.kg, window, "service-drain")
