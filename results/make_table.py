@@ -1,23 +1,19 @@
-"""Render the §Roofline markdown table from dry-run JSONs.
+"""Render result tables.
 
-  python results/make_table.py results/dryrun3 [--md]
+* Roofline (dry-run JSON dir):  python results/make_table.py results/dryrun3 [--md]
+* Streaming tails (CSV):        python results/make_table.py results/exp_streaming.csv [--md]
+
+A ``.csv`` argument renders the streaming-admission percentile table:
+per ``(mode, rate_qps)``, the p50/p95/p99 over every per-window row that
+``benchmarks/bench_streaming.py`` wrote.
 """
+import csv
 import glob
 import json
 import sys
 
 d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun3"
 md = "--md" in sys.argv
-rows = []
-for f in sorted(glob.glob(f"{d}/*.json")):
-    rec = json.load(open(f))
-    if rec.get("skipped") or "error" in rec:
-        continue
-    r = rec["roofline"]
-    rows.append((rec["arch"], rec["shape"], rec["mesh"],
-                 r["t_compute"], r["t_memory"], r["t_collective"],
-                 r["dominant"], r["useful_flops_ratio"],
-                 r["roofline_fraction"]))
 
 
 def fmt(t):
@@ -28,13 +24,58 @@ def fmt(t):
     return f"{t * 1e6:.0f} us"
 
 
-if md:
-    print("| arch | shape | mesh | t_comp | t_mem | t_coll | dominant | useful | fraction |")
-    print("|---|---|---|---|---|---|---|---|---|")
-    for a, s, m, c, me, x, dom, u, fr in sorted(rows):
-        print(f"| {a} | {s} | {m} | {fmt(c)} | {fmt(me)} | {fmt(x)} | "
-              f"{dom} | {u:.2f} | {fr:.3f} |")
+def streaming_table(path):
+    """Percentile rows per (mode, rate_qps) from the per-window CSV."""
+    groups = {}
+    with open(path, newline="") as fh:
+        for rec in csv.DictReader(fh):
+            key = (float(rec["rate_qps"]), rec["mode"])
+            groups.setdefault(key, []).append(rec)
+    rows = []
+    for (rate, mode), recs in sorted(groups.items()):
+        n = sum(int(r["n"]) for r in recs)
+        # worst window carries the tail; the mean row summarizes the run
+        p50 = sum(float(r["p50_ms"]) * int(r["n"]) for r in recs) / n
+        p95 = max(float(r["p95_ms"]) for r in recs)
+        p99 = max(float(r["p99_ms"]) for r in recs)
+        rows.append((rate, mode, len(recs), n, p50, p95, p99))
+    if md:
+        print("| rate (qps) | mode | windows | queries | p50 | p95 (worst window) | p99 (worst window) |")
+        print("|---|---|---|---|---|---|---|")
+        for rate, mode, w, n, p50, p95, p99 in rows:
+            print(f"| {rate:g} | {mode} | {w} | {n} | {fmt(p50 / 1e3)} | "
+                  f"{fmt(p95 / 1e3)} | {fmt(p99 / 1e3)} |")
+    else:
+        for rate, mode, w, n, p50, p95, p99 in rows:
+            print(f"rate={rate:8g} {mode:10s} windows={w:3d} n={n:5d} "
+                  f"p50={fmt(p50 / 1e3):>9s} p95={fmt(p95 / 1e3):>9s} "
+                  f"p99={fmt(p99 / 1e3):>9s}")
+
+
+def roofline_table(dirname):
+    rows = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        rec = json.load(open(f))
+        if rec.get("skipped") or "error" in rec:
+            continue
+        r = rec["roofline"]
+        rows.append((rec["arch"], rec["shape"], rec["mesh"],
+                     r["t_compute"], r["t_memory"], r["t_collective"],
+                     r["dominant"], r["useful_flops_ratio"],
+                     r["roofline_fraction"]))
+    if md:
+        print("| arch | shape | mesh | t_comp | t_mem | t_coll | dominant | useful | fraction |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for a, s, m, c, me, x, dom, u, fr in sorted(rows):
+            print(f"| {a} | {s} | {m} | {fmt(c)} | {fmt(me)} | {fmt(x)} | "
+                  f"{dom} | {u:.2f} | {fr:.3f} |")
+    else:
+        for a, s, m, c, me, x, dom, u, fr in sorted(rows):
+            print(f"{a:18s} {s:12s} {m:6s} c={fmt(c):>9s} m={fmt(me):>9s} "
+                  f"x={fmt(x):>9s} {dom[:4]:5s} u={u:5.2f} f={fr:.3f}")
+
+
+if d.endswith(".csv"):
+    streaming_table(d)
 else:
-    for a, s, m, c, me, x, dom, u, fr in sorted(rows):
-        print(f"{a:18s} {s:12s} {m:6s} c={fmt(c):>9s} m={fmt(me):>9s} "
-              f"x={fmt(x):>9s} {dom[:4]:5s} u={u:5.2f} f={fr:.3f}")
+    roofline_table(d)

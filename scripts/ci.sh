@@ -163,6 +163,73 @@ print(f"[ci] mixed read/write serving: {svc.write_log.n_inserted} inserts/"
       f"epoch {kg.epoch}, all executors == rebuild-from-scratch twin")
 EOF
 
+echo "== smoke: streaming admission == query_batch (LUBM(1), all executors) =="
+python - <<'EOF'
+import numpy as np
+from repro.api import KGService, WriteBatch
+from repro.graph import lubm
+from repro.graph.triples import TripleStore
+
+def canon(b):
+    return sorted(map(tuple, np.stack(
+        [b[k] for k in sorted(b)], axis=1).tolist())) if b else []
+
+ds = lubm.load(1, seed=0)
+window = ds.extended_workload()
+# each twin gets its own store copy: the write path mutates in place
+def build(executor):
+    svc = KGService(TripleStore(ds.store.triples.copy(), ds.store.dictionary),
+                    4, executor=executor, migration_budget=120_000,
+                    type_predicate=ds.dictionary.lookup("rdf:type"))
+    svc.bootstrap(ds.base_workload())
+    svc.query_batch(window)
+    report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert report.accepted and svc.session is not None
+    return svc
+
+rng = np.random.default_rng(0)
+t = ds.store.triples
+batches = []                         # identical writes for every replay
+for w in range(3):
+    rows = t[rng.integers(0, len(t), 32)].copy()
+    rows[:, 0] = (1 << 22) + np.arange(w * 32, (w + 1) * 32, dtype=np.int32)
+    batches.append(rows)
+
+per_exec = {}
+for name in ("numpy", "jax", "jax-pallas"):
+    # synchronous baseline: write, then one query_batch per admission window
+    svc = build(name)
+    sync = []
+    for rows in batches:
+        svc.write(WriteBatch(inserts=rows.copy()))
+        sync += [canon(b) for b, _ in svc.query_batch(window)]
+    # streamed replay of the same admission order, migration in flight
+    svc = build(name)
+    stream = svc.stream(pipeline=True, max_window=len(window))
+    at = 0.0
+    for rows in batches:
+        stream.submit_write(WriteBatch(inserts=rows.copy()), at=at)
+        for q in window:
+            stream.submit(q, at=at)
+        at += 0.25
+    stream.run_until_idle()
+    got = [canon(r.bindings) for r in stream.poll()]
+    assert got == sync, f"stream != query_batch under executor {name}"
+    assert svc.session is None and svc.write_log.n_inserted == 96
+    per_exec[name] = got
+    s = stream.stats()
+    assert s["latency"]["n"] == len(window) * 3
+    assert s["latency"]["p50"] <= s["latency"]["p95"] <= s["latency"]["p99"]
+    print(f"[ci] streaming executor={name}: {len(got)} queries over "
+          f"{stream.n_windows} windows byte-identical to query_batch, "
+          f"p95={s['latency']['p95'] * 1e3:.2f} ms")
+assert per_exec["numpy"] == per_exec["jax"] == per_exec["jax-pallas"], \
+    "executor backends disagree on streamed results"
+EOF
+
+echo "== smoke: benchmarks/bench_streaming.py --dry-run =="
+python benchmarks/bench_streaming.py --dry-run
+
 echo "== smoke: benchmarks/bench_writes.py --dry-run =="
 python benchmarks/bench_writes.py --dry-run
 

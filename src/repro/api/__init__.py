@@ -16,6 +16,11 @@ Everything callers need to serve a partitioned knowledge graph:
 * :class:`WriteBatch` / :class:`WriteReport` — the live write path
   (``repro.write``): ``svc.insert(...)`` / ``svc.delete(...)`` served
   concurrently with queries, replication, and an in-flight drain;
+* :class:`StreamService` / :class:`LatencyRecorder` — continuous
+  admission (``repro.stream``): ``svc.stream()`` serves submitted
+  queries/writes in pipelined windows, byte-identical to ``query_batch``
+  over the same admission order, with p50/p95/p99 tail telemetry on
+  ``svc.stats()``;
 * executors: :class:`Executor` protocol with :class:`NumpyExecutor`
   (reference) and :class:`JaxExecutor` (batched; ``pallas=True`` — the
   ``executor="jax-pallas"`` knob — probes joins through the
@@ -31,6 +36,7 @@ from repro.api.service import KGService
 from repro.migrate import MigrationSession
 from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
 from repro.replicate import ReplicaMap
+from repro.stream import LatencyRecorder, StreamService
 from repro.write import WriteBatch, WriteLog, WriteReport
 
 __all__ = [
@@ -39,11 +45,13 @@ __all__ = [
     "HashPartitioner",
     "JaxExecutor",
     "KGService",
+    "LatencyRecorder",
     "MigrationSession",
     "NumpyExecutor",
     "PartitionedKG",
     "Partitioner",
     "ReplicaMap",
+    "StreamService",
     "WawPartitioner",
     "WriteBatch",
     "WriteLog",

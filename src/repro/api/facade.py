@@ -429,6 +429,19 @@ class PartitionedKG:
     def imbalance(self) -> float:
         return self.state.imbalance()
 
+    def telemetry(self) -> dict:
+        """Serving-counter snapshot — layout identity plus the cache/view
+        telemetry the facade accumulates. Folded into ``KGService.stats()``
+        next to the streaming layer's latency aggregates."""
+        return dict(epoch=self.epoch, data_version=self.data_version,
+                    n_triples=self.store.n_triples, n_shards=self.n_shards,
+                    n_features=len(self.state.feature_to_shard),
+                    n_replicated=len(self.replicas.replicated()),
+                    imbalance=self.imbalance(),
+                    plan_builds=self.plan_builds, plan_hits=self.plan_hits,
+                    result_hits=self.result_hits,
+                    view_rebuilds=self.view_rebuilds)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"PartitionedKG(n_triples={self.store.n_triples}, "
                 f"n_shards={self.n_shards}, "

@@ -93,6 +93,7 @@ class KGService:
         self.session: Optional[MigrationSession] = None   # in-flight drain
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
         self.write_log = kgwrite.WriteLog()        # applied-mutation history
+        self._stream_recorder = None   # LatencyRecorder of the live stream
 
     @classmethod
     def from_dataset(cls, ds, n_shards: int,
@@ -148,8 +149,20 @@ class KGService:
         of the window — the window pays a bounded migration stall (at most
         ``migration_budget`` bytes of traffic) and then serves the updated
         hybrid layout, so the hottest features arrive earliest."""
-        assert self.kg is not None, "bootstrap() first"
         self.step()
+        return self.serve_window(queries)[0]
+
+    def serve_window(self, queries: Sequence[Query],
+                     ) -> Tuple[List[Tuple[Dict[int, np.ndarray],
+                                           qexec.ExecStats]], List[int]]:
+        """The execution half of :meth:`query_batch`: serve one window at
+        the *current* layout — cache check, one ``run_batch`` over the
+        misses, TM observation — with no migration step. This is the seam
+        the streaming loop (``repro.stream``) pumps windows through after
+        interleaving its own writes/chunks; returns ``(results, miss)``
+        where ``miss`` indexes the queries that actually reached the
+        backend (the rest were epoch-valid result-cache hits)."""
+        assert self.kg is not None, "bootstrap() first"
         results = [self.kg.cached_result(q) for q in queries]
         miss = [i for i, r in enumerate(results) if r is None]
         if miss:
@@ -159,7 +172,7 @@ class KGService:
                 self.kg.store_result(queries[i], *res)
         for q, (_, stats) in zip(queries, results):
             self.observe(q, stats.modeled_time(self.net))
-        return results
+        return results, miss
 
     # ------------------------------------------------------------------ #
     # live writes (repro.write)
@@ -201,6 +214,45 @@ class KGService:
         if ctrl is not None and report.effective:
             ctrl.note_writes(report)
         return report
+
+    # ------------------------------------------------------------------ #
+    # streaming admission (repro.stream)
+    # ------------------------------------------------------------------ #
+    def stream(self, **kwargs) -> "object":
+        """Open a continuous-admission serving loop over this service — a
+        :class:`repro.stream.StreamService`. Queries and write batches are
+        ``submit``-ted as they arrive, served in pipelined windows through
+        the same :meth:`serve_window` seam (results stay byte-identical to
+        a synchronous ``query_batch`` over the same admission order), and
+        per-query admission→completion latency lands in the stream's
+        :class:`repro.stream.LatencyRecorder` (surfaced via
+        :meth:`stats`). Keyword arguments forward to ``StreamService``
+        (``pipeline=``, ``max_window=``, ``hit_cost_s=``)."""
+        from repro.stream import StreamService
+        return StreamService(self, **kwargs)
+
+    def stats(self) -> Dict[str, object]:
+        """One dict of everything observable about the serving session:
+        the facade's layout/cache telemetry, write-log and migration-drain
+        progress, and — when a stream is (or was) attached — the latency
+        aggregates (overall / per-window / per-shard p50/p95/p99)."""
+        assert self.kg is not None, "bootstrap() first"
+        out = self.kg.telemetry()
+        out.update(
+            executor=self.executor.name,
+            partitioner=self.partitioner.name,
+            writes_applied=len(self.write_log.entries),
+            rows_inserted=self.write_log.n_inserted,
+            rows_deleted=self.write_log.n_deleted,
+            migration_in_flight=self.session is not None,
+            migration_progress=(self.session.progress()
+                                if self.session is not None else 1.0),
+        )
+        rec = self._stream_recorder
+        if rec is not None and len(rec):
+            out["latency"] = rec.summary()
+            out["latency_per_shard"] = rec.per_shard()
+        return out
 
     def run_workload(self, queries: Sequence[Query],
                      ) -> Tuple[Dict[str, float], Dict[str, qexec.ExecStats]]:

@@ -66,6 +66,15 @@ class AdaptConfig:
     # — so a hot-written feature becomes cheaper to demote than to keep
     # replicated. 0 disables write-fanout pricing.
     write_cost_weight: float = 1.0
+    # write-heat drift trigger (repro.stream / PR-6 headroom): should_adapt
+    # fires on data drift alone — no query-time degradation needed — when
+    # some feature accumulated at least ``write_drift_min_rows`` fresh rows
+    # this TM window AND that fresh heat is at least ``write_drift_ratio``
+    # of the feature's current size (churn comparable to the feature
+    # itself). A round (accepted or not) consumes the signal, so a rejected
+    # round cannot re-trigger on the same writes. min_rows <= 0 disables.
+    write_drift_ratio: float = 0.5
+    write_drift_min_rows: int = 64
 
 
 @dataclasses.dataclass
@@ -124,6 +133,11 @@ class AWAPartController:
         # data-drift signal — feeds the guard's fanout pricing and the
         # replica proposal's demotion penalty; cleared with the window
         self.write_heat = np.zeros(space.n_features, dtype=np.float64)
+        # write heat already consumed by an adaptation round this window —
+        # a rejected round marks its heat seen instead of clearing it (the
+        # fanout pricing still wants the full window's heat), so the drift
+        # trigger only ever fires on writes no round has judged yet
+        self._drift_seen = np.zeros(space.n_features, dtype=np.float64)
 
     # ------------------------------------------------------------------ #
     # workload bookkeeping (QAFE + TM)
@@ -138,6 +152,12 @@ class AWAPartController:
         return float(np.mean(per_q)) if per_q else 0.0
 
     def should_adapt(self) -> bool:
+        # data drift alone is a trigger: a churn-hot feature no longer waits
+        # for the next query-driven degradation to relocate (repro.write
+        # feeds the heat, the round's fanout pricing + chunk priority
+        # consume it)
+        if self.write_drift():
+            return True
         # no baseline yet: adapt on the first *observed* degradation signal —
         # an empty TM (fresh session, zero queries served) must not trigger a
         # pointless round
@@ -145,6 +165,30 @@ class AWAPartController:
             return any(self.exec_times.values())
         cur = self.avg_execution_time()
         return cur > self.config.adapt_threshold * self._baseline_avg
+
+    def write_drift(self) -> bool:
+        """True when some feature's *fresh* write heat (rows written this
+        TM window and not yet judged by a round) clears both drift
+        thresholds: at least ``write_drift_min_rows`` rows, and at least
+        ``write_drift_ratio`` of the feature's current size."""
+        cfg = self.config
+        min_rows = int(getattr(cfg, "write_drift_min_rows", 0) or 0)
+        if min_rows <= 0 or self.state is None or not len(self.write_heat):
+            return False
+        wh = self.write_heat
+        seen = self._drift_seen
+        if len(seen) < len(wh):
+            seen = np.pad(seen, (0, len(wh) - len(seen)))
+        fresh = wh - seen
+        hot = fresh >= min_rows
+        if not hot.any():
+            return False
+        sizes = self.state.feature_sizes.astype(np.float64)
+        if len(sizes) < len(wh):
+            sizes = np.pad(sizes, (0, len(wh) - len(sizes)))
+        ratio = float(getattr(cfg, "write_drift_ratio", 0.0))
+        return bool((hot & (fresh >= ratio * np.maximum(sizes[:len(wh)],
+                                                        1.0))).any())
 
     def reset_baseline(self, value: Optional[float] = None) -> None:
         """Set (or clear, with None) the T_base reference of Fig.-5 line 2.
@@ -160,6 +204,8 @@ class AWAPartController:
         self.exec_times.clear()
         if len(self.write_heat):
             self.write_heat[:] = 0.0
+        if len(self._drift_seen):
+            self._drift_seen[:] = 0.0
 
     def note_writes(self, report) -> None:
         """Fold an applied ``repro.write.WriteReport`` into this window's
@@ -441,6 +487,14 @@ class AWAPartController:
             self.state = cur
             mplan = migration.MigrationPlan([], 0, 0)
             rmap_new = None                # served replicas stay as they are
+        # the round judged this window's write heat either way — mark it
+        # consumed so a rejected round can't re-trigger the drift signal on
+        # the same writes (an accepted round's clear_window resets both)
+        if len(self.write_heat) < self.space.n_features:
+            self.write_heat = np.pad(
+                self.write_heat,
+                (0, self.space.n_features - len(self.write_heat)))
+        self._drift_seen = self.write_heat.copy()
         return self.state, AdaptReport(
             accepted=accepted, plan=mplan, dj_before=dj_before,
             dj_after=dj_after, t_base=t_base, t_new=t_new,

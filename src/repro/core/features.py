@@ -104,6 +104,43 @@ class FeatureSpace:
     def po_index(self, p: int, o: int) -> int | None:
         return self._tracked_po.get(self._pack(p, o))
 
+    def p_index_batch(self, p: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`p_index` over a predicate column: P-feature
+        index per row, ``-1`` where the predicate is untracked (instead of
+        the scalar method's KeyError). One sorted-key ``searchsorted``
+        instead of a dict probe per row."""
+        p = np.asarray(p, dtype=np.int64)
+        out = np.full(p.shape, -1, dtype=np.int32)
+        tracked = [(key[1], i) for i, key in enumerate(self._keys)
+                   if key[0] == "P"]
+        if tracked and len(p):
+            tracked.sort()
+            keys = np.array([k for k, _ in tracked], dtype=np.int64)
+            vals = np.array([i for _, i in tracked], dtype=np.int32)
+            pos = np.clip(np.searchsorted(keys, p), 0, len(keys) - 1)
+            hit = keys[pos] == p
+            out[hit] = vals[pos[hit]]
+        return out
+
+    def po_index_batch(self, p: np.ndarray, o: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`po_index` over (p, o) columns: tracked-PO
+        feature index per row, ``-1`` where the pair is untracked. The
+        batched half of the write path's routing (``repro.write``) — one
+        packed-key ``searchsorted`` over the tracked-PO table for the whole
+        batch."""
+        p = np.asarray(p, dtype=np.int64)
+        o = np.asarray(o, dtype=np.int64)
+        out = np.full(p.shape, -1, dtype=np.int32)
+        if self._tracked_po and len(p):
+            packed = (p << 32) | o
+            keys = np.array(sorted(self._tracked_po), dtype=np.int64)
+            vals = np.array([self._tracked_po[k] for k in keys.tolist()],
+                            dtype=np.int32)
+            pos = np.clip(np.searchsorted(keys, packed), 0, len(keys) - 1)
+            hit = keys[pos] == packed
+            out[hit] = vals[pos[hit]]
+        return out
+
     # ------------------------------------------------------------------ #
     def query_features(self, q: Query, *, fine: bool = True) -> np.ndarray:
         """The query's P/PO feature set as sorted unique indices.
@@ -142,18 +179,12 @@ class FeatureSpace:
         t = self.store.triples
         p = t[:, 1].astype(np.int64)
         o = t[:, 2].astype(np.int64)
-        owner = np.empty(t.shape[0], dtype=np.int32)
-        for pi in np.unique(p).tolist():
-            owner[p == pi] = self._index[("P", int(pi))]
-        if self._tracked_po:
-            packed = (p << 32) | o
-            keys = np.array(sorted(self._tracked_po.keys()), dtype=np.int64)
-            vals = np.array([self._tracked_po[k] for k in keys.tolist()],
-                            dtype=np.int32)
-            pos = np.searchsorted(keys, packed)
-            pos = np.clip(pos, 0, len(keys) - 1)
-            hit = keys[pos] == packed
-            owner[hit] = vals[pos[hit]]
+        owner = self.p_index_batch(p)
+        assert len(owner) == 0 or owner.min() >= 0, \
+            "store carries a predicate with no P feature"
+        po = self.po_index_batch(p, o)
+        hit = po >= 0
+        owner[hit] = po[hit]
         return owner
 
     def feature_sizes(self, owners: np.ndarray | None = None) -> np.ndarray:

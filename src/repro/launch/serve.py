@@ -14,11 +14,17 @@ Pallas kernels — see ``docs/kernels.md``), and
 and ``--writes-per-window N`` interleaves N synthetic live inserts
 (``repro.write``: fresh subjects carrying sampled (p, o) pairs, routed by
 primary and fanned out to replicas) ahead of every drain window — mixed
-read/write serving.
+read/write serving. ``--stream`` swaps the experiment for the
+continuous-admission loop (``repro.stream``): an open-loop replay at
+``--arrival-rate`` qps with writes and the migration drain in flight,
+reporting p50/p95/p99 admission→completion tails per window.
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
       --experiment 1 --executor jax --migration-budget 1048576 \
       --writes-per-window 256
+  PYTHONPATH=src python -m repro.launch.serve --universities 3 --shards 8 \
+      --stream --arrival-rate 400 --migration-budget 1048576 \
+      --writes-per-window 128
 """
 from __future__ import annotations
 
@@ -176,6 +182,58 @@ def _print_exp(t0: Dict, t1: Dict, s0, s1, report) -> None:
           f"{avg(t1,list(t1))*1e3:.1f} ms")
 
 
+def stream_demo(ds, svc: KGService, rate_qps: float, passes: int = 4,
+                writes_per_window: int = 0, verbose=True):
+    """Continuous-admission serving (``repro.stream``): bootstrap, accept
+    an adaptation round, then replay an open-loop arrival process of the
+    extended workload — writes admitted mid-stream, the migration drain
+    retiring into idle gaps — and report per-window p50/p95/p99 tails."""
+    from repro.api import WriteBatch
+    from repro.stream import interleave, open_loop_arrivals, replay
+
+    svc.bootstrap(ds.base_workload())
+    window = ds.extended_workload()
+    svc.query_batch(window)
+    report = svc.adapt(ds.workload([f"EQ{i}" for i in range(1, 11)]))
+    in_flight = svc.session.n_chunks if svc.session is not None else 0
+
+    queries = window * passes
+    writes = []
+    if writes_per_window:
+        rng = np.random.default_rng(0)
+        t = svc.kg.store.triples
+        fresh = svc.fresh_ids(passes * writes_per_window)
+        for k in range(passes):
+            rows = t[rng.integers(0, len(t), writes_per_window)].copy()
+            rows[:, 0] = fresh[k * writes_per_window:
+                               (k + 1) * writes_per_window].astype(np.int32)
+            writes.append((k * len(window), WriteBatch(inserts=rows)))
+    stream = svc.stream(pipeline=True)
+    replay(stream, interleave(
+        queries, open_loop_arrivals(len(queries), rate_qps), writes))
+    results = stream.poll()
+
+    stats = stream.stats()
+    lat = stats["latency"]
+    if verbose:
+        for w, s in stream.recorder.per_window().items():
+            print(f"[stream] window {w}: n={s['n']:3d} "
+                  f"p50 {s['p50'] * 1e3:8.1f} ms | "
+                  f"p95 {s['p95'] * 1e3:8.1f} ms | "
+                  f"p99 {s['p99'] * 1e3:8.1f} ms")
+        hidden = sum(w["hidden_s"] for w in stream.window_log)
+        print(f"[stream] {len(results)} queries @ {rate_qps:g} qps over "
+              f"{stream.n_windows} windows, makespan {stream.now:.2f}s, "
+              f"{hidden * 1e3:.1f} ms of stalls hidden | accepted="
+              f"{report.accepted}, {in_flight} chunks drained mid-stream, "
+              f"{stats['rows_inserted']} rows written")
+        print(f"[stream] overall p50 {lat['p50'] * 1e3:.1f} ms | "
+              f"p95 {lat['p95'] * 1e3:.1f} ms | "
+              f"p99 {lat['p99'] * 1e3:.1f} ms")
+    return dict(stream=stream, results=results, stats=stats, report=report,
+                state=svc.kg.state, kg=svc.kg)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--universities", type=int, default=10)
@@ -198,6 +256,13 @@ def main() -> None:
                     help="synthetic live inserts ahead of every drain "
                          "window (repro.write; needs --migration-budget "
                          "to produce multiple windows)")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous-admission serving demo (repro.stream) "
+                         "instead of an experiment: open-loop replay with "
+                         "writes and the migration drain in flight, "
+                         "p50/p95/p99 tails per window")
+    ap.add_argument("--arrival-rate", type=float, default=200.0,
+                    help="open-loop arrival rate for --stream (queries/s)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
     args = ap.parse_args()
@@ -212,7 +277,10 @@ def main() -> None:
           f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
           f"{args.shards} shards, strategy={svc.partitioner.name}, "
           f"executor={svc.executor.name}")
-    if args.experiment == 1:
+    if args.stream:
+        out = stream_demo(ds, svc, args.arrival_rate,
+                          writes_per_window=args.writes_per_window)
+    elif args.experiment == 1:
         out = experiment1(ds, svc,
                           writes_per_window=args.writes_per_window)
     else:

@@ -108,6 +108,13 @@ class MigrationSession:
         return 1.0 if self.plan.bytes == 0 \
             else self.bytes_applied / self.plan.bytes
 
+    def peek(self) -> Optional[migration.MigrationChunk]:
+        """The chunk the next ``step()`` would apply (``None`` when drained)
+        — without applying it. The streaming drainer (``repro.stream``) uses
+        this to size the stall it is about to interleave into an idle gap
+        before committing to it."""
+        return None if self.done else self.chunks[self.applied]
+
     # ------------------------------------------------------------------ #
     def step(self) -> Optional[migration.MigrationChunk]:
         """Apply the next chunk as an incremental delta on the facade.

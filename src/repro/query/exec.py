@@ -64,6 +64,9 @@ class NetworkModel:
     scan_rows_per_s: float = 5e6      # Virtuoso-ish index scan rate
     join_rows_per_s: float = 5e6      # hash-join probe rate at the PPN
     row_bytes: float = 60.0           # serialized SPARQL result row (HTTP/XML)
+    plan_s: float = 0.002             # master-side cost per query plan built
+    #   (the currency of repro.stream's pre-staging: a pipelined window hides
+    #    plan builds behind the previous window's execution)
 
     def time(self, messages: int, rows_shipped: int) -> float:
         return (messages * self.latency_s

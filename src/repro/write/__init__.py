@@ -219,12 +219,92 @@ def _owner_features(kg, ins_rows: np.ndarray,
     """Owner feature per effective insert row, creating (and placing) any
     features the universe has never seen.
 
+    Routing is vectorized (the PR-6 headroom item): one batched tracked-PO
+    lookup plus one batched P lookup resolve every row whose owner feature
+    already exists (``FeatureSpace.po_index_batch``/``p_index_batch`` —
+    a ``searchsorted`` each instead of a python loop over the batch). Only
+    the leftover rows — brand-new predicates and never-seen ``rdf:type``
+    classes — take the scalar creation path, in first-occurrence order, so
+    feature birth order and placement are byte-identical to the scalar
+    routing (``_owner_features_scalar``, kept as the parity oracle).
+
     A new predicate's P feature goes to the least-loaded shard (by primary
     triple count — there is no parent to inherit from); a new
     ``rdf:type`` class gets a tracked PO feature on its parent P shard,
     mirroring the ownership split the FeatureSpace applies at
     construction, so a rebuild-from-scratch facade derives the identical
     owner for every row."""
+    space, state = kg.space, kg.state
+    owners = np.empty(len(ins_rows), dtype=np.int32)
+    new_features: List[Tuple[int, Tuple, int]] = []
+    if not len(ins_rows):
+        return owners, new_features
+
+    p = ins_rows[:, 1].astype(np.int64)
+    o = ins_rows[:, 2].astype(np.int64)
+    po = space.po_index_batch(p, o)
+    owners[:] = po
+    need = po < 0                          # PO pair untracked at batch start
+    if not need.any():
+        return owners, new_features
+
+    tp = -1 if space.type_predicate is None else int(space.type_predicate)
+    idx = np.flatnonzero(need)
+    pi = space.p_index_batch(p[idx])
+    fast = (pi >= 0) & (p[idx] != tp)      # known plain predicate: owner = P
+    owners[idx[fast]] = pi[fast]
+
+    loads = None
+    placed: Dict[int, int] = {}        # new feature idx -> assigned shard
+
+    def place_least_loaded(fid: int) -> int:
+        nonlocal loads
+        if loads is None:
+            loads = np.asarray(kg.shard_sizes(), dtype=np.int64).copy()
+        dst = int(np.argmin(loads))
+        loads[dst] += 1
+        return dst
+
+    nf_before = space.n_features
+    for i in idx[~fast].tolist():          # feature-creating rows only
+        p_i, o_i = int(p[i]), int(o[i])
+        f = space.po_index(p_i, o_i)       # may exist since batch start now
+        if f is None:
+            known = space.index_of(("P", p_i))
+            if known is None:
+                known = space.track_p(p_i)
+                dst = place_least_loaded(known)
+                placed[known] = dst
+                new_features.append((known, space.key(known), dst))
+            if p_i == space.type_predicate:
+                # a never-seen class: split it out of rdf:type exactly like
+                # the constructor / track_workload would have
+                f = space.track_po(p_i, o_i)
+                dst = (placed[known] if known in placed
+                       else int(state.feature_to_shard[known]))
+                placed[f] = dst
+                new_features.append((f, space.key(f), dst))
+            else:
+                f = known
+        owners[i] = f
+    if space.n_features > nf_before:
+        add = np.array([shard for _f, _k, shard in new_features],
+                       dtype=np.int32)
+        assert len(add) == space.n_features - nf_before
+        state.feature_to_shard = np.concatenate(
+            [state.feature_to_shard, add])
+        state.feature_sizes = np.concatenate(
+            [state.feature_sizes, np.zeros(len(add), np.int64)])
+        kg.replicas.extend(state.feature_to_shard)
+    return owners, new_features
+
+
+def _owner_features_scalar(kg, ins_rows: np.ndarray,
+                           ) -> Tuple[np.ndarray,
+                                      List[Tuple[int, Tuple, int]]]:
+    """The original per-row routing loop — the parity oracle the vectorized
+    :func:`_owner_features` is tested against (identical owners, identical
+    feature birth order/placement, identical state growth)."""
     space, state = kg.space, kg.state
     owners = np.empty(len(ins_rows), dtype=np.int32)
     new_features: List[Tuple[int, Tuple, int]] = []
@@ -250,8 +330,6 @@ def _owner_features(kg, ins_rows: np.ndarray,
                 placed[known] = dst
                 new_features.append((known, space.key(known), dst))
             if p == space.type_predicate:
-                # a never-seen class: split it out of rdf:type exactly like
-                # the constructor / track_workload would have
                 f = space.track_po(p, o)
                 dst = (placed[known] if known in placed
                        else int(state.feature_to_shard[known]))

@@ -1,0 +1,372 @@
+"""repro.stream: continuous admission, pipelined windows, the background
+drainer, tail-latency telemetry — and THE streaming acceptance property:
+streamed admission (arbitrary arrival order, writes and migration chunks
+drained mid-stream) produces bindings byte-identical to synchronous
+``query_batch`` over the same admission order, on numpy/jax/jax-pallas,
+at every epoch."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+from test_executors import _random_dataset, _random_query
+from test_write_path import _random_batch
+
+from repro import stream as kgstream
+from repro.api import (HashPartitioner, KGService, MigrationSession,
+                       StreamService, WriteBatch)
+from repro.core import migration
+from repro.core.partition import hash_partition
+from repro.graph.triples import TripleStore
+from repro.query import exec as qexec
+from repro.replicate import ReplicaMap
+from repro.stream import (LatencyRecorder, QueryLatency, interleave,
+                          open_loop_arrivals, poisson_arrivals,
+                          percentile_summary, replay)
+
+EXECUTORS = ("numpy", "jax", "jax-pallas")
+
+
+def _fresh_service(ds, n_shards=4, **kwargs):
+    """A KGService over a COPY of the (memoized) dataset's store — the
+    write path mutates stores in place, and equivalence twins must not
+    share one."""
+    store = TripleStore(ds.store.triples.copy(), ds.store.dictionary)
+    return KGService(store, n_shards,
+                     type_predicate=ds.dictionary.lookup("rdf:type"),
+                     **kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# telemetry
+# --------------------------------------------------------------------------- #
+
+def test_percentile_summary_shape():
+    s = percentile_summary([])
+    assert s == dict(n=0, mean=0.0, p50=0.0, p95=0.0, p99=0.0, max=0.0)
+    s = percentile_summary(np.linspace(0.0, 1.0, 101))
+    assert s["n"] == 101 and s["max"] == 1.0
+    assert s["p50"] == pytest.approx(0.5)
+    assert s["p95"] == pytest.approx(0.95)
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_latency_recorder_grouping(tmp_path):
+    rec = LatencyRecorder()
+    for i in range(10):
+        rec.record(QueryLatency(
+            seq=i, name=f"Q{i}", window=i // 5, shard=i % 2,
+            arrival_s=0.1 * i, start_s=0.1 * i + 0.05,
+            finish_s=0.1 * i + 0.05 + 0.01 * (i + 1), epoch=0,
+            cached=False))
+    assert len(rec) == 10
+    assert rec.summary()["n"] == 10
+    per_w = rec.per_window()
+    assert sorted(per_w) == [0, 1] and per_w[0]["n"] == 5
+    per_s = rec.per_shard()
+    assert sorted(per_s) == [0, 1]
+    # latency = queue + service; the record exposes both
+    r = rec.records[3]
+    assert r.latency_s == pytest.approx(r.queue_s + (r.finish_s - r.start_s))
+    # CSV export: one row per window, constants prepended
+    path = tmp_path / "lat.csv"
+    n = rec.to_csv(path, mode="pipelined", rate_qps=10)
+    text = path.read_text().splitlines()
+    assert n == 2 and len(text) == 3
+    assert text[0].startswith("mode,rate_qps,window,n,p50_ms,p95_ms,p99_ms")
+
+
+def test_arrival_processes():
+    arr = open_loop_arrivals(5, rate_qps=10.0, start=1.0)
+    assert np.allclose(np.diff(arr), 0.1) and arr[0] == 1.0
+    rng = np.random.default_rng(0)
+    poi = poisson_arrivals(100, rate_qps=10.0, rng=rng)
+    assert (np.diff(poi) >= 0).all()
+    assert np.mean(np.diff(poi)) == pytest.approx(0.1, rel=0.5)
+
+
+# --------------------------------------------------------------------------- #
+# admission mechanics
+# --------------------------------------------------------------------------- #
+
+def test_stream_serves_and_matches_query_batch(small_lubm):
+    window = small_lubm.extended_workload()
+    svc_sync = _fresh_service(small_lubm)
+    svc_sync.bootstrap(small_lubm.base_workload())
+    ref = {q.name: canon_bindings(b)
+           for q, (b, _) in zip(window, svc_sync.query_batch(window))}
+
+    svc = _fresh_service(small_lubm)
+    svc.bootstrap(small_lubm.base_workload())
+    stream = svc.stream(max_window=7)
+    seqs = [stream.submit(q) for q in window]
+    assert seqs == list(range(len(window)))
+    assert stream.pending == len(window)
+    served = stream.run_until_idle()
+    assert stream.pending == 0
+    results = stream.poll()
+    assert [r.seq for r in results] == seqs          # completion in order
+    assert stream.poll() == []                       # drained
+    for q, r in zip(window, results):
+        assert canon_bindings(r.bindings) == ref[q.name], q.name
+    # telemetry surfaced through the recorder and KGService.stats()
+    assert served is stream.recorder and len(served) == len(window)
+    assert stream.n_windows == int(np.ceil(len(window) / 7))
+    stats = svc.stats()
+    assert stats["latency"]["n"] == len(window)
+    assert set(stats["latency_per_shard"]) <= set(range(svc.n_shards))
+    assert all(s["p50"] <= s["p95"] <= s["p99"]
+               for s in stats["latency_per_shard"].values())
+
+
+def test_window_never_spans_a_write(small_lubm):
+    """A write admitted between two queries splits the window: the second
+    query is served post-write even though both arrived together."""
+    svc = _fresh_service(small_lubm)
+    svc.bootstrap(small_lubm.base_workload())
+    q = small_lubm.queries["Q1"]
+    d = small_lubm.dictionary
+    tp, take = d.lookup("rdf:type"), d.lookup("ub:takesCourse")
+    cls = d.lookup("ub:GraduateStudent")
+    s = int(svc.fresh_ids(1)[0])
+    batch = WriteBatch(inserts=[[s, tp, cls],
+                                [s, take, small_lubm.named.grad_course0]])
+    stream = svc.stream()
+    stream.submit(q, at=0.0)
+    stream.submit_write(batch, at=0.0)
+    stream.submit(q, at=0.0)
+    stream.run_until_idle()
+    first, second = stream.poll()
+    assert len(second.bindings[next(iter(second.bindings))]) \
+        == len(first.bindings[next(iter(first.bindings))]) + 1
+    assert second.latency.epoch > first.latency.epoch
+    assert stream.n_windows == 2
+
+
+def test_arrival_clock_and_monotone_clamp(small_lubm):
+    svc = _fresh_service(small_lubm)
+    svc.bootstrap(small_lubm.base_workload())
+    stream = svc.stream()
+    q = small_lubm.queries["Q1"]
+    stream.submit(q, at=5.0)
+    stream.submit(q, at=1.0)             # out-of-order timestamp: clamped
+    assert [ev.arrival_s for ev in stream._queue] == [5.0, 5.0]
+    stream.run_until_idle()
+    a, b = stream.poll()
+    assert a.latency.arrival_s == 5.0 and b.latency.arrival_s == 5.0
+    # the clock idled up to the first arrival; one window, repeat cached
+    assert stream.now >= 5.0 and b.latency.cached is False  # same window,
+    # both executed in the same batch -> the repeat is a plan-level dedup?
+    # no: same window executes misses once, the second is a result-cache hit
+    # only across windows; within one batch both index the same miss list
+    assert stream.n_windows == 1
+
+
+def test_pipelined_hides_stalls_sync_does_not(small_lubm):
+    """Same admission order, migration in flight: pipeline=True finishes
+    no later and serves a no-worse p95 than pipeline=False, with
+    byte-identical bindings."""
+    window = small_lubm.extended_workload()
+
+    def run(pipeline):
+        svc = _fresh_service(small_lubm, migration_budget=120_000)
+        svc.bootstrap(small_lubm.base_workload())
+        svc.query_batch(window)
+        rep = svc.adapt(small_lubm.workload(
+            [f"EQ{i}" for i in range(1, 11)]))
+        assert rep.accepted and svc.session is not None
+        stream = svc.stream(pipeline=pipeline, max_window=8)
+        events = interleave(
+            window * 2, open_loop_arrivals(len(window) * 2, 40.0))
+        replay(stream, events)
+        return svc, stream, stream.poll()
+
+    svc_p, sp, res_p = run(True)
+    svc_s, ss, res_s = run(False)
+    for a, b in zip(res_p, res_s):
+        assert a.query.name == b.query.name
+        assert canon_bindings(a.bindings) == canon_bindings(b.bindings)
+    assert sp.now <= ss.now
+    assert sp.recorder.summary()["p95"] <= ss.recorder.summary()["p95"]
+    # the pipelined run hid stall time behind execution
+    hidden = sum(w["hidden_s"] for w in sp.window_log)
+    assert hidden > 0
+    assert all(w["hidden_s"] == 0.0 for w in ss.window_log)
+
+
+def test_idle_gaps_drain_migration(small_lubm):
+    """Widely-spaced arrivals: the pipelined drainer retires extra chunks
+    inside the idle gaps, finishing the migration strictly earlier than
+    the one-chunk-per-window baseline discipline would."""
+    window = small_lubm.extended_workload()
+    svc = _fresh_service(small_lubm, migration_budget=60_000)
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(window)
+    rep = svc.adapt(small_lubm.workload([f"EQ{i}" for i in range(1, 11)]))
+    assert rep.accepted and svc.session is not None
+    n_chunks = svc.session.n_chunks
+    assert n_chunks >= 4
+    stream = svc.stream(pipeline=True, max_window=4)
+    # 3 sparse windows of 4 queries, 2 seconds apart — gap >> chunk stall
+    for i, q in enumerate(window[:12]):
+        stream.submit(q, at=2.0 * (i // 4))
+    stream.run_until_idle()
+    assert svc.session is None, "idle gaps should have finished the drain"
+    assert stream.n_windows == 3
+    drained = sum(1 for w in stream.window_log if w["chunk_bytes"] > 0)
+    assert drained <= stream.n_windows < n_chunks
+
+
+def test_prestaging_survives_quiet_windows(small_lubm):
+    """With no mutations in flight, window N+1's plans are pre-staged
+    during window N and used as cache hits (no rebuilds)."""
+    window = small_lubm.extended_workload()
+    svc = _fresh_service(small_lubm)
+    svc.bootstrap(small_lubm.base_workload())
+    stream = svc.stream(pipeline=True, max_window=6)
+    for q in window:
+        stream.submit(q, at=0.0)
+    stream.run_until_idle()
+    assert stream.prestage_hits > 0
+    # plan cost was charged exactly once per distinct query
+    assert svc.kg.plan_builds == len(window)
+
+
+# --------------------------------------------------------------------------- #
+# THE acceptance property (satellite: hypothesis interleaving test)
+# --------------------------------------------------------------------------- #
+
+def _twin(seed, executor, n_shards=4):
+    """Deterministic service twin: same seed -> identical store, layout,
+    in-flight migration session (with replica promotions) and executor."""
+    rng = np.random.default_rng(seed)
+    store, _ = _random_dataset(rng, n_triples=300)
+    svc = KGService(store, n_shards, HashPartitioner(), executor=executor)
+    svc.bootstrap(())
+    sizes = svc.space.feature_sizes()
+    target = hash_partition(sizes, n_shards,
+                            seed=int(rng.integers(1 << 16)))
+    target_replicas = ReplicaMap.primary_only(target)
+    for f in range(len(target.feature_to_shard)):
+        if rng.random() < 0.3:
+            target_replicas.add(f, int(rng.integers(n_shards)))
+    budget = max(int(sizes.sum()) * migration.TRIPLE_BYTES // 5, 1)
+    svc.session = MigrationSession(svc.kg, target, bytes_budget=budget,
+                                   target_replicas=target_replicas)
+    return svc
+
+
+def _script(seed, n_events=8):
+    """Generate the admission script once, against a scratch twin that
+    applies writes as it generates them (deletes sample the evolving
+    store), capturing raw arrays so every replay sees identical events."""
+    rng = np.random.default_rng(seed)
+    scratch = _twin(seed, "numpy")
+    queries = [_random_query(rng, scratch.store, name=f"R{i}")
+               for i in range(3)]
+    events, t = [], 0.0
+    for _ in range(n_events):
+        t += float(rng.choice([0.0, 0.01, 0.5]))
+        if rng.random() < 0.4:
+            batch = _random_batch(rng, scratch.kg)
+            scratch.write(batch)
+            events.append((t, WriteBatch(batch.inserts.copy(),
+                                         batch.deletes.copy())))
+        else:
+            events.append((t, queries[int(rng.integers(len(queries)))]))
+    if not any(isinstance(p, WriteBatch) for _, p in events):
+        batch = _random_batch(rng, scratch.kg)
+        scratch.write(batch)
+        events.append((t, WriteBatch(batch.inserts.copy(),
+                                     batch.deletes.copy())))
+    return events
+
+
+def _sync_replay(svc, events):
+    """Synchronous admission-order baseline: writes apply in place, runs
+    of consecutive queries execute as query_batch windows."""
+    out, pending = [], []
+
+    def flush():
+        if pending:
+            for b, _ in svc.query_batch(list(pending)):
+                out.append(canon_bindings(b))
+            pending.clear()
+
+    for _, payload in events:
+        if isinstance(payload, WriteBatch):
+            flush()
+            svc.write(WriteBatch(payload.inserts.copy(),
+                                 payload.deletes.copy()))
+            out.append(None)
+        else:
+            pending.append(payload)
+    flush()
+    return out
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_streamed_admission_matches_synchronous_batch(seed):
+    """THE streaming acceptance property: arbitrary arrival order, writes
+    and migration/replica chunks drained mid-stream — streamed bindings
+    are byte-identical to synchronous ``query_batch`` over the same
+    admission order, per executor, at every epoch along the way."""
+    events = _script(seed)
+    pipeline = bool(seed % 2)
+    max_window = int(np.random.default_rng(seed).integers(1, 5))
+    per_exec = {}
+    for name in EXECUTORS:
+        sync = _sync_replay(_twin(seed, name), events)
+
+        svc = _twin(seed, name)
+        stream = StreamService(svc, pipeline=pipeline,
+                               max_window=max_window)
+        replay(stream, [(at, (p if isinstance(p, WriteBatch)
+                              else p)) for at, p in events])
+        got = {r.seq: canon_bindings(r.bindings) for r in stream.poll()}
+        for i, (at, payload) in enumerate(events):
+            if isinstance(payload, WriteBatch):
+                assert i not in got
+            else:
+                assert got[i] == sync[i], \
+                    (seed, name, i, payload.name)
+        per_exec[name] = [got[i] for i in sorted(got)]
+        # streamed queries were recorded with monotone finish times
+        fins = [r.finish_s for r in stream.recorder.records]
+        assert fins == sorted(fins)
+    assert per_exec["numpy"] == per_exec["jax"] == per_exec["jax-pallas"]
+
+
+def test_stream_with_service_adaptation_loop(small_lubm):
+    """End-to-end: bootstrapped adaptive service, accepted round with a
+    budgeted session, writes + queries streamed while the drain retires —
+    final layout lands exactly on the accepted target."""
+    window = small_lubm.extended_workload()
+    svc = _fresh_service(small_lubm, migration_budget=120_000,
+                         replica_budget=256_000)
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(window)
+    report = svc.adapt(small_lubm.workload(
+        [f"EQ{i}" for i in range(1, 11)]))
+    assert report.accepted and svc.session is not None
+    sess = svc.session
+    rng = np.random.default_rng(0)
+    t = svc.store.triples.copy()
+    stream = svc.stream(pipeline=True, max_window=len(window))
+    at = 0.0
+    for _ in range(sess.n_chunks + 1):
+        rows = t[rng.integers(0, len(t), 32)].copy()
+        rows[:, 0] = svc.fresh_ids(len(rows)).astype(np.int32)
+        stream.submit_write(WriteBatch(inserts=rows), at=at)
+        for q in window:
+            stream.submit(q, at=at)
+        at += 0.5
+    stream.run_until_idle()
+    assert svc.session is None
+    nf = len(sess.target.feature_to_shard)
+    assert np.array_equal(svc.kg.state.feature_to_shard[:nf],
+                          sess.target.feature_to_shard)
+    assert svc.write_log.n_inserted > 0
+    assert svc.stats()["latency"]["n"] == len(window) * (sess.n_chunks + 1)

@@ -508,3 +508,139 @@ def test_service_writes_during_drain(small_lubm):
     assert inserted > 0
     assert svc.write_log.n_inserted - svc.write_log.n_deleted > 0
     _assert_matches_rebuild(svc.kg, window, "service-drain")
+
+
+# --------------------------------------------------------------------------- #
+# vectorized write routing (PR-7 satellite): batch lookups + scalar parity
+# --------------------------------------------------------------------------- #
+
+def test_feature_space_batch_index_lookups(space):
+    """`p_index_batch` / `po_index_batch` agree with the scalar lookups on
+    every tracked key and return -1 on misses."""
+    keys = [(i, space.key(i)) for i in range(space.n_features)]
+    p_keys = [(i, k[1]) for i, k in keys if k[0] == "P"]
+    po_keys = [(i, k[1], k[2]) for i, k in keys if k[0] == "PO"]
+    assert p_keys and po_keys
+
+    p = np.array([k[1] for k in p_keys] + [10 ** 6], dtype=np.int64)
+    got = space.p_index_batch(p)
+    assert got.dtype == np.int32
+    assert got.tolist() == [k[0] for k in p_keys] + [-1]
+
+    pp = np.array([k[1] for k in po_keys] + [10 ** 6], dtype=np.int64)
+    oo = np.array([k[2] for k in po_keys] + [10 ** 6], dtype=np.int64)
+    got = space.po_index_batch(pp, oo)
+    assert got.tolist() == [k[0] for k in po_keys] + [-1]
+    # a tracked PO probed with a different object is a miss, not its parent
+    assert space.po_index_batch(pp[:1], np.array([10 ** 6])).tolist() == [-1]
+    # empty batch round-trips
+    assert space.p_index_batch(np.empty(0, np.int64)).shape == (0,)
+
+
+def _typed_kg(seed, n_shards=3):
+    """Randomized typed store (p=2 is rdf:type): P and PO features, room
+    for new predicates and never-seen classes."""
+    d = Dictionary()
+    for i in range(40):
+        d.encode(f"t{i}")
+    rng = np.random.default_rng(seed)
+    t = np.stack([rng.integers(0, 30, 150), rng.integers(0, 5, 150),
+                  rng.integers(0, 30, 150)], axis=1).astype(np.int32)
+    store = build_store(t, d)
+    space = FeatureSpace(store, type_predicate=2)
+    state = hash_partition(space.feature_sizes(), n_shards, 0)
+    return PartitionedKG(store, space, state)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_owner_features_vectorized_matches_scalar(seed):
+    """THE routing-parity property: the vectorized `_owner_features` and
+    the scalar oracle derive identical owners, identical feature birth
+    order/placement, and identical state growth — on typed and untyped
+    universes, with new predicates, never-seen classes (repeated within
+    one batch), and known PO/P rows mixed."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 48))
+    rows = np.stack([rng.integers(0, 40, n),
+                     rng.integers(0, 9, n),     # preds 5..8 are new
+                     rng.integers(0, 40, n)], axis=1).astype(np.int32)
+    for build in (lambda: _typed_kg(seed), _tiny_kg):
+        kg_v, kg_s = build(), build()
+        ov, nv = kgwrite._owner_features(kg_v, rows)
+        os_, ns = kgwrite._owner_features_scalar(kg_s, rows)
+        assert np.array_equal(ov, os_), (seed, rows[ov != os_])
+        assert nv == ns
+        assert np.array_equal(kg_v.state.feature_to_shard,
+                              kg_s.state.feature_to_shard)
+        assert np.array_equal(kg_v.state.feature_sizes,
+                              kg_s.state.feature_sizes)
+        assert kg_v.space.n_features == kg_s.space.n_features
+        assert [kg_v.space.key(i) for i in range(kg_v.space.n_features)] \
+            == [kg_s.space.key(i) for i in range(kg_s.space.n_features)]
+        assert np.array_equal(kg_v.replicas.masks, kg_s.replicas.masks)
+
+
+# --------------------------------------------------------------------------- #
+# write-drift adaptation trigger (PR-7 satellite)
+# --------------------------------------------------------------------------- #
+
+def test_write_drift_thresholds_controller_unit(space):
+    cfg = AdaptConfig(write_drift_min_rows=64, write_drift_ratio=0.5)
+    ctrl = AWAPartController(space, 4, cfg)
+    assert not ctrl.write_drift()            # no partition state yet
+    n = space.n_features
+    ctrl.state = PartitionState(np.zeros(n, np.int32),
+                                np.full(n, 1000, np.int64), 4)
+    assert not ctrl.write_drift()            # no heat
+    ctrl.write_heat[5] = 63.0
+    assert not ctrl.write_drift()            # below the min-rows gate
+    ctrl.write_heat[5] = 400.0
+    assert not ctrl.write_drift()            # 400 < 0.5 * size: ratio gate
+    ctrl.write_heat[5] = 600.0
+    assert ctrl.write_drift() and ctrl.should_adapt()
+    ctrl._drift_seen = ctrl.write_heat.copy()   # a round judged this heat
+    assert not ctrl.write_drift()
+    ctrl.write_heat[5] += 700.0              # fresh churn re-arms the trigger
+    assert ctrl.write_drift()
+    ctrl.clear_window()
+    assert not ctrl.write_drift() and not ctrl.write_heat.any()
+    # knob off: never fires
+    off = AWAPartController(space, 4, AdaptConfig(write_drift_min_rows=0))
+    off.state = ctrl.state
+    off.write_heat[:] = 10_000.0
+    assert not off.write_drift()
+
+
+def test_write_drift_triggers_service_round(small_lubm):
+    """Heavy churn on one feature fires `should_adapt()` with zero query
+    degradation; a round (accepted or not) consumes the signal; sub-
+    threshold churn never fires."""
+    svc = KGService.from_dataset(small_lubm, 4)
+    svc.bootstrap(small_lubm.base_workload())
+    svc.query_batch(small_lubm.base_workload())
+    svc.reset_baseline(svc.avg_execution_time())
+    assert not svc.should_adapt()            # healthy tail, no churn
+
+    d = small_lubm.dictionary
+    p_hot = d.encode("ub:streamEdge")        # a write-born predicate
+
+    def burst(k):
+        s = svc.fresh_ids(k).astype(np.int32)
+        return np.stack([s, np.full(k, p_hot, np.int32), s], axis=1)
+
+    svc.insert(burst(32))                    # below write_drift_min_rows
+    assert not svc.should_adapt()
+    svc.insert(burst(100))                   # 132 fresh rows, size 132
+    assert svc.controller.write_drift() and svc.should_adapt()
+
+    svc.adapt(())                            # the round consumes the signal
+    assert not svc.controller.write_drift() and not svc.should_adapt()
+    svc.insert(burst(32))                    # fresh churn below the gate
+    assert not svc.should_adapt()
+
+    # relative gate: 70 rows into a feature thousands of rows deep
+    take = d.lookup("ub:takesCourse")
+    s = svc.fresh_ids(70).astype(np.int32)
+    svc.insert(np.stack([s, np.full(70, take, np.int32), s], axis=1))
+    assert not svc.controller.write_drift()
