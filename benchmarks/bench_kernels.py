@@ -73,11 +73,190 @@ def join_rows(rng, *, dry_run: bool = False) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def _staged_host(lcs, rcs):
+    """The pre-fusion composite: three granular host ops in sequence."""
+    order, lo, counts = join_ops.hash_probe_numpy(lcs, rcs)
+    li, pos = join_ops.expand_pairs_numpy(lo, counts)
+    return li, order[pos]
+
+
+def _staged_oracle(lcs, rcs):
+    """The staged device tier: every op round-trips host<->device on its
+    own, materializing each intermediate on the host between stages."""
+    order, lo, counts = join_ops.hash_probe_oracle(lcs, rcs)
+    li, pos = join_ops.expand_pairs(lo, counts, use_kernel=False)
+    return li, order[pos]
+
+
+def _lubm_shapes():
+    """Record the key columns of every fused-pipeline call in one LUBM(3)/8
+    extended-workload window — the acceptance join shapes. Returns the
+    captured ``(lcs, rcs)`` pairs (non-empty sides, largest work first) and
+    the raw call count."""
+    from repro.api import JaxExecutor, KGService
+    from repro.graph import lubm
+
+    ds = lubm.load(3, 0)
+    svc = KGService.from_dataset(ds, 8)
+    kg = svc.bootstrap(ds.base_workload())
+    plans = [kg.plan(q) for q in ds.extended_workload()]
+    captured = []
+    real = join_ops.hash_join_pipeline
+
+    def recording(lcs, rcs, **kw):
+        captured.append(([np.asarray(c) for c in lcs],
+                         [np.asarray(c) for c in rcs]))
+        return real(lcs, rcs, **kw)
+
+    join_ops.hash_join_pipeline = recording
+    try:
+        JaxExecutor().run_batch(plans, kg)
+    finally:
+        join_ops.hash_join_pipeline = real
+    live = [s for s in captured if len(s[0][0]) and len(s[1][0])]
+    live.sort(key=lambda s: len(s[0][0]) * len(s[1][0]), reverse=True)
+    return live, len(captured)
+
+
+def pipeline_rows(rng, *, dry_run: bool = False,
+                  ) -> List[Tuple[str, float, str]]:
+    """Fused ``hash_join_pipeline`` vs the staged composite it replaced.
+
+    ``--dry-run`` pins all three tiers bit-identical (plus the expand
+    kernel alone) at a tiny shape; the full run captures the real LUBM(3)/8
+    join shapes, pins oracle parity on every one and pallas-interpret
+    parity on the smallest, then times fused-vs-staged on the host and
+    device tiers and reports the structural host-transfer counts (fused
+    strictly below staged, per the dispatch docs)."""
+    rows: List[Tuple[str, float, str]] = []
+    if dry_run:
+        lcs, rcs = _join_fixture(rng, 64, 48)
+        ref_li, ref_ri = _staged_host(lcs, rcs)
+        order, lo, counts = join_ops.hash_probe_numpy(lcs, rcs)
+        li_k, pos_k = join_ops.expand_pairs(lo, counts, use_kernel=True,
+                                            interpret=True)
+        li_n, pos_n = join_ops.expand_pairs_numpy(lo, counts)
+        assert np.array_equal(li_k, li_n) and np.array_equal(pos_k, pos_n), \
+            "expand kernel mismatch"
+        for mode, kw in (("numpy", {}), ("oracle", {}),
+                         ("pallas", dict(use_kernel=True, interpret=True))):
+            li, ri, total = join_ops.hash_join_pipeline(lcs, rcs, mode=mode,
+                                                        **kw)
+            assert total == len(ref_li), f"fused {mode} total mismatch"
+            assert (np.array_equal(li, ref_li)
+                    and np.array_equal(ri, ref_ri)), f"fused {mode} mismatch"
+        rows.append(("kern/pipeline_dry_run_ok", 1.0,
+                     f"modes=3_total={len(ref_li)}"))
+        return rows
+
+    # expand microbench at the probe fixture shape
+    nl = 4096
+    lcs, rcs = _join_fixture(rng, nl, nl)
+    _, lo, counts = join_ops.hash_probe_numpy(lcs, rcs)
+    total = int(counts.sum())
+    rows.append((f"kern/expand{nl}_numpy_us", _time(
+        lambda: join_ops.expand_pairs_numpy(lo, counts)), f"total={total}"))
+    rows.append((f"kern/expand{nl}_jnp_us", _time(
+        lambda: join_ops.expand_pairs(lo, counts, use_kernel=False)),
+        "jitted_searchsorted"))
+    rows.append((f"kern/expand{nl}_pallas_interp_us", _time(
+        lambda: join_ops.expand_pairs(lo, counts, use_kernel=True,
+                                      interpret=True), n=1),
+        "interpret-mode"))
+
+    shapes, n_calls = _lubm_shapes()
+    big = shapes[:6]                    # timing set: the heaviest joins
+    rows.append(("kern/pipeline_lubm3_shapes", float(len(big)),
+                 f"of_{n_calls}_window_calls_max_nl="
+                 f"{max(len(l[0]) for l, _ in big)}"))
+
+    # parity: fused == staged on every timed shape (device oracle tier),
+    # and pallas-interpret pinned on the smallest real shapes (interpret
+    # runs the grid in Python, so the big shapes stay on the cheap tiers)
+    refs = []
+    for l, r in big:
+        ref = _staged_host(l, r)
+        got = join_ops.hash_join_pipeline(l, r, mode="oracle")
+        assert (np.array_equal(got[0], ref[0])
+                and np.array_equal(got[1], ref[1])), \
+            "fused oracle mismatch on LUBM shape"
+        refs.append(ref)
+    for l, r in shapes[-2:]:
+        ref = _staged_host(l, r)
+        got = join_ops.hash_join_pipeline(l, r, mode="pallas",
+                                          use_kernel=True, interpret=True)
+        assert (np.array_equal(got[0], ref[0])
+                and np.array_equal(got[1], ref[1])), \
+            "fused pallas-interpret mismatch on LUBM shape"
+
+    t_staged = sum(_time(lambda l=l, r=r: _staged_host(l, r))
+                   for l, r in big)
+    t_fused = sum(_time(lambda l=l, r=r: join_ops.hash_join_pipeline(
+        l, r, mode="numpy")) for l, r in big)
+    rows.append(("kern/pipeline_staged_host_us", t_staged,
+                 "probe+expand+gather_numpy"))
+    rows.append(("kern/pipeline_fused_host_us", t_fused,
+                 f"speedup_vs_staged={t_staged / t_fused:.2f}x"))
+    t_staged_o = sum(_time(lambda l=l, r=r: _staged_oracle(l, r))
+                     for l, r in big)
+    t_fused_o = sum(_time(lambda l=l, r=r: join_ops.hash_join_pipeline(
+        l, r, mode="oracle")) for l, r in big)
+    rows.append(("kern/pipeline_staged_jnp_us", t_staged_o,
+                 "per-stage_round_trips"))
+    rows.append(("kern/pipeline_fused_jnp_us", t_fused_o,
+                 f"speedup_vs_staged={t_staged_o / t_fused_o:.2f}x"
+                 "_device_resident"))
+
+    # structural host-transfer accounting: fused strictly below staged
+    with join_ops.track_transfers() as tf_f:
+        for l, r in big:
+            join_ops.hash_join_pipeline(l, r, mode="oracle")
+    with join_ops.track_transfers() as tf_s:
+        for l, r in big:
+            _staged_oracle(l, r)
+    assert tf_f.total < tf_s.total, \
+        "fused pipeline must cross the boundary strictly less than staged"
+    rows.append(("kern/pipeline_fused_transfers", float(tf_f.total),
+                 f"h2d={tf_f.h2d}_d2h={tf_f.d2h}_staged={tf_s.total}"
+                 f"(h2d={tf_s.h2d}_d2h={tf_s.d2h})"))
+    l, r = big[0]
+    with join_ops.track_transfers() as t_p:
+        order, lo, counts = join_ops.hash_probe_oracle(l, r)
+    with join_ops.track_transfers() as t_e:
+        _, pos = join_ops.expand_pairs(lo, counts, use_kernel=False)
+    with join_ops.track_transfers() as t_g:
+        order[pos]
+    for name, t in (("probe", t_p), ("expand", t_e), ("gather", t_g)):
+        rows.append((f"kern/pipeline_staged_{name}_transfers",
+                     float(t.total), f"h2d={t.h2d}_d2h={t.d2h}"))
+
+    # kernel tier at a small shape: fused keeps word pairs device-resident
+    lcs, rcs = _join_fixture(rng, 64, 48)
+    with join_ops.track_transfers() as kf:
+        join_ops.hash_join_pipeline(lcs, rcs, mode="pallas",
+                                    use_kernel=True, interpret=True)
+    with join_ops.track_transfers() as ks:
+        order, lo, counts = join_ops.hash_probe(lcs, rcs, use_kernel=True,
+                                                interpret=True)
+        _, pos = join_ops.expand_pairs(lo, counts, use_kernel=True,
+                                       interpret=True)
+        join_ops.gather_rows(order, pos, use_kernel=True, interpret=True,
+                             bounded_by_len=True)
+    assert kf.total < ks.total, \
+        "fused kernel tier must cross the boundary strictly less than staged"
+    rows.append(("kern/pipeline_pallas_transfers", float(kf.total),
+                 f"h2d={kf.h2d}_d2h={kf.d2h}_staged={ks.total}"
+                 f"(h2d={ks.h2d}_d2h={ks.d2h})"))
+    return rows
+
+
 def run(*, dry_run: bool = False) -> List[Tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     if dry_run:
-        return join_rows(rng, dry_run=True)
+        return join_rows(rng, dry_run=True) + pipeline_rows(rng,
+                                                            dry_run=True)
     rows = join_rows(rng)
+    rows += pipeline_rows(rng)
 
     # jaccard: jnp oracle vs pallas-interpret (correctness-checked timing)
     bm = jnp.asarray(rng.integers(0, 2 ** 32, (256, 32), dtype=np.uint32))
@@ -129,10 +308,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true",
                     help="validate the join kernel at a tiny shape and exit")
+    ap.add_argument("--csv", default=None,
+                    help="also write the rows to this CSV path "
+                         "(e.g. results/exp_kernels.csv)")
     args = ap.parse_args()
+    rows = run(dry_run=args.dry_run)
     print("name,us_per_call,derived")
-    for name, us, derived in run(dry_run=args.dry_run):
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write("name,us_per_call,derived\n")
+            for name, us, derived in rows:
+                fh.write(f"{name},{us:.1f},{derived}\n")
 
 
 if __name__ == "__main__":

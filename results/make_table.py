@@ -2,10 +2,14 @@
 
 * Roofline (dry-run JSON dir):  python results/make_table.py results/dryrun3 [--md]
 * Streaming tails (CSV):        python results/make_table.py results/exp_streaming.csv [--md]
+* Kernel/exp rows (CSV):        python results/make_table.py results/exp_kernels.csv [--md]
 
-A ``.csv`` argument renders the streaming-admission percentile table:
-per ``(mode, rate_qps)``, the p50/p95/p99 over every per-window row that
-``benchmarks/bench_streaming.py`` wrote.
+A ``.csv`` argument is discriminated by header: a ``rate_qps`` column
+renders the streaming-admission percentile table (per ``(mode, rate_qps)``,
+the p50/p95/p99 over every per-window row ``benchmarks/bench_streaming.py``
+wrote); a ``us_per_call`` column renders the generic name/time/derived rows
+that ``bench_kernels.py --csv`` and ``bench_exp1.py`` emit — including the
+fused-vs-staged join-pipeline speedup rows.
 """
 import csv
 import glob
@@ -52,6 +56,24 @@ def streaming_table(path):
                   f"p99={fmt(p99 / 1e3):>9s}")
 
 
+def rows_table(path):
+    """Generic ``name,us_per_call,derived`` rows (bench_kernels/bench_exp1):
+    one line per row, times human-formatted, the derived annotation —
+    speedups, transfer counts, shapes — carried through verbatim."""
+    with open(path, newline="") as fh:
+        recs = list(csv.DictReader(fh))
+    if md:
+        print("| name | time/value | derived |")
+        print("|---|---|---|")
+        for r in recs:
+            print(f"| {r['name']} | {fmt(float(r['us_per_call']) / 1e6)} | "
+                  f"{r['derived']} |")
+    else:
+        for r in recs:
+            print(f"{r['name']:42s} {fmt(float(r['us_per_call']) / 1e6):>10s}"
+                  f"  {r['derived']}")
+
+
 def roofline_table(dirname):
     rows = []
     for f in sorted(glob.glob(f"{dirname}/*.json")):
@@ -76,6 +98,11 @@ def roofline_table(dirname):
 
 
 if d.endswith(".csv"):
-    streaming_table(d)
+    with open(d, newline="") as fh:
+        head = csv.DictReader(fh).fieldnames or []
+    if "us_per_call" in head:
+        rows_table(d)
+    else:
+        streaming_table(d)
 else:
     roofline_table(d)

@@ -32,6 +32,39 @@ assert rows["numpy"] == rows["jax"] == rows["jax-pallas"], \
     "executor backends disagree"
 EOF
 
+echo "== smoke: fused join pipeline forced (pallas-interpret) == numpy =="
+python - <<'EOF'
+import numpy as np
+from repro.api import JaxExecutor, KGService
+from repro.graph import lubm
+import repro.query.exec as qexec
+
+def canon(b):
+    return sorted(map(tuple, np.stack(
+        [b[k] for k in sorted(b)], axis=1).tolist())) if b else []
+
+ds = lubm.load(1, seed=0)
+window = ds.extended_workload()
+ref_svc = KGService.from_dataset(ds, n_shards=4, executor="numpy")
+ref_svc.bootstrap(ds.base_workload())
+ref = ref_svc.query_batch(window)
+
+# probe_kernel=True under pallas forces every fused-pipeline stage through
+# the Pallas kernels (interpret mode on this CPU container)
+svc = KGService.from_dataset(
+    ds, n_shards=4, executor=JaxExecutor(pallas=True, probe_kernel=True))
+svc.bootstrap(ds.base_workload())
+got = svc.query_batch(window)
+assert [canon(b) for b, _ in got] == [canon(b) for b, _ in ref], \
+    "fused pipeline bindings diverge from the numpy reference"
+for (_, st), (_, rst) in zip(got, ref):
+    for f in qexec.ExecStats.COMPARABLE:
+        assert getattr(st, f) == getattr(rst, f), (f, st, rst)
+exp = sum(st.expanded_rows for _, st in got)
+print(f"[ci] fused pipeline (forced kernels, interpret) == numpy: "
+      f"{len(window)} queries byte-identical, {exp} expanded rows")
+EOF
+
 echo "== smoke: throttled migration drain on LUBM(1) =="
 python - <<'EOF'
 import numpy as np
@@ -241,6 +274,23 @@ python benchmarks/bench_migration.py --dry-run
 
 echo "== smoke: benchmarks/bench_kernels.py --dry-run (join kernel) =="
 python benchmarks/bench_kernels.py --dry-run
+
+echo "== smoke: kernels.autotune --quick (empirical dispatch profile) =="
+python -m repro.kernels.autotune --quick --out /tmp/ci_dispatch_profile.json
+python - <<'EOF'
+from repro.kernels import dispatch
+from repro.kernels.autotune import PROBE_CAP, DispatchProfile
+
+prof = DispatchProfile.load("/tmp/ci_dispatch_profile.json")
+try:
+    prof.install()
+    got = dispatch.envelope(PROBE_CAP, 123)
+    assert got == prof.envelopes[PROBE_CAP], (got, prof.envelopes)
+finally:
+    dispatch.clear_profile()
+print(f"[ci] autotune profile round-trip: backend={prof.backend} "
+      f"envelopes={prof.envelopes}")
+EOF
 
 echo "== docs drift guard: run every <!-- ci:run --> fenced snippet =="
 python - <<'EOF'

@@ -13,6 +13,14 @@ lives in one place:
   ``threshold=`` argument.
 * :func:`resolve` — turn a caller's ``use_kernel``/``interpret`` pair
   (``None`` = auto) into concrete booleans.
+* :func:`envelope` / :func:`load_profile` — per-op scaling-envelope values
+  (the join family's probe-work / gather-residency / expand-work caps).
+  Resolution order: process env var > a loaded **dispatch profile** >
+  the op's hard-coded default. Profiles are recorded empirically by
+  ``repro.kernels.autotune`` (kernel-vs-fallback crossover sweeps) and
+  installed either programmatically (:func:`load_profile`) or via the
+  ``REPRO_DISPATCH_PROFILE`` environment variable naming a profile JSON —
+  so the envelopes reflect measured hardware, not guesses.
 
 Two auto policies exist, selected by ``hot_path``:
 
@@ -33,20 +41,69 @@ import jax
 
 DEFAULT_KERNEL_THRESHOLD = 256
 _ENV_VAR = "REPRO_KERNEL_THRESHOLD"
+_PROFILE_ENV = "REPRO_DISPATCH_PROFILE"
+
+# the installed dispatch profile: {envelope name -> value}. Explicit
+# load_profile() wins; otherwise lazily loaded from $REPRO_DISPATCH_PROFILE
+# (re-read when the env var points somewhere new, so tests can monkeypatch).
+_profile: "dict[str, int] | None" = None
+_profile_src: "str | None" = None
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def kernel_threshold(threshold: int | None = None) -> int:
-    """The dispatch size floor: explicit argument > env override > default."""
-    if threshold is not None:
-        return threshold
-    env = os.environ.get(_ENV_VAR)
+def load_profile(profile) -> "dict[str, int]":
+    """Install a recorded dispatch profile: a path to an autotune JSON, a
+    ``repro.kernels.autotune.DispatchProfile``, or a plain mapping of
+    envelope names to values. Returns the installed envelope dict."""
+    global _profile, _profile_src
+    if hasattr(profile, "envelopes"):                  # DispatchProfile
+        data, src = dict(profile.envelopes), "<object>"
+    elif isinstance(profile, dict):
+        data, src = profile.get("envelopes", profile), "<dict>"
+    else:                                              # a JSON path
+        import json
+        with open(profile) as fh:
+            raw = json.load(fh)
+        data, src = raw.get("envelopes", raw), str(profile)
+    _profile = {str(k): int(v) for k, v in data.items()}
+    _profile_src = src
+    return dict(_profile)
+
+
+def clear_profile() -> None:
+    global _profile, _profile_src
+    _profile = None
+    _profile_src = None
+
+
+def _active_profile() -> "dict[str, int] | None":
+    env_path = os.environ.get(_PROFILE_ENV)
+    if env_path and _profile_src != env_path and _profile_src not in (
+            "<object>", "<dict>"):
+        load_profile(env_path)
+    return _profile
+
+
+def envelope(name: str, default: int) -> int:
+    """Resolve a dispatch envelope: env var > loaded profile > default."""
+    env = os.environ.get(name)
     if env is not None:
         return int(env)
-    return DEFAULT_KERNEL_THRESHOLD
+    prof = _active_profile()
+    if prof is not None and name in prof:
+        return prof[name]
+    return default
+
+
+def kernel_threshold(threshold: int | None = None) -> int:
+    """The dispatch size floor: explicit argument > env override > loaded
+    profile > default."""
+    if threshold is not None:
+        return threshold
+    return envelope(_ENV_VAR, DEFAULT_KERNEL_THRESHOLD)
 
 
 def resolve(use_kernel: bool | None, interpret: bool | None, size: int, *,

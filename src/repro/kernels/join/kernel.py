@@ -1,15 +1,25 @@
-"""Pallas TPU kernels: hash-join key packing, sorted probe, masked gather.
+"""Pallas TPU kernels: hash-join key packing, sorted probe, segmented
+ragged expansion, masked gather.
 
-The executor's hash join has three vectorizable stages (the ragged pair
-expansion between them is data-dependent addressing arithmetic and stays on
-the host):
+The executor's hash join has four vectorizable stages:
 
 1. **pack** — reduce the (N, K<=2) shared-variable key columns of each side
    to one 62-bit key per row (base-2^31 positional packing; dictionary ids
    are < 2^31).
 2. **probe** — for every probe-side key, the ``[lo, hi)`` range of equal
    keys in the sorted build side (``searchsorted`` left/right).
-3. **gather** — index the build side's sort permutation with the expanded
+3. **expand** — turn the per-probe-row ``(lo, counts)`` match runs into
+   flat ``(li, pos)`` pair-index arrays (the data-dependent ragged
+   expansion, formerly host ``np.repeat``/``np.cumsum`` arithmetic). Match
+   runs partition the output index space: output ``j`` belongs to exactly
+   the segment ``i`` with ``starts[i] <= j < starts[i] + counts[i]``
+   (``starts`` = exclusive cumsum of ``counts``), so each (BN, BM) grid
+   step broadcast-tests a tile of output indices against a tile of
+   segments and accumulates the single owner's ``(i, lo[i] + j -
+   starts[i])`` via a masked sum — a segmented scan with no dynamic
+   gathers on the VPU. Zero-count segments own nothing and drop out for
+   free, which also makes the padding inert.
+4. **gather** — index the build side's sort permutation with the expanded
    match positions.
 
 TPUs have no int64, so packed keys travel through the kernels as two 32-bit
@@ -144,6 +154,67 @@ def probe_sorted_pallas(build_hi: jnp.ndarray, build_lo: jnp.ndarray,
         interpret=interpret,
     )(bh, bl, ph, plo)
     return lo[0, :n], hi[0, :n]
+
+
+# --------------------------------------------------------------------------- #
+# expand
+# --------------------------------------------------------------------------- #
+
+def _expand_kernel(starts_ref, counts_ref, lo_ref, li_ref, pos_ref, *,
+                   block_n: int, block_m: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        li_ref[...] = jnp.zeros_like(li_ref)
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+    starts = starts_ref[0, :]                         # (BM,) int32
+    counts = counts_ref[0, :]                         # (BM,) int32
+    lo = lo_ref[0, :]                                 # (BM,) int32
+    # (BN, BM) global output indices / segment ids for this grid step
+    j = (pl.program_id(0) * block_n
+         + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_m), 0))
+    seg = (pl.program_id(1) * block_m
+           + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_m), 1))
+    # exactly one segment owns each real output index (runs partition the
+    # output space); zero-count segments — including all padding — own none
+    owns = (starts[None, :] <= j) & (j < (starts + counts)[None, :])
+    li_ref[0, :] += jnp.where(owns, seg, 0).sum(axis=1)
+    pos_ref[0, :] += jnp.where(owns, lo[None, :] + j - starts[None, :],
+                               0).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("total", "block_n", "block_m",
+                                             "interpret"))
+def expand_pairs_pallas(starts: jnp.ndarray, counts: jnp.ndarray,
+                        lo: jnp.ndarray, *, total: int, block_n: int = 256,
+                        block_m: int = 512, interpret: bool = False,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Segmented ragged expansion: per-segment ``(starts, counts, lo)``
+    match runs -> flat ``(li, pos)`` pair indices of length ``total``
+    (``total`` = the static padded output size; callers slice to the true
+    ``counts.sum()``). ``li[j]`` is the owning segment, ``pos[j] = lo[li[j]]
+    + (j - starts[li[j]])`` its position in the build-side sort order.
+    Output indices past the last run (padding included) own nothing and
+    come back 0 — callers slice them off."""
+    m = starts.shape[0]
+    mp = max(block_m, (m + block_m - 1) // block_m * block_m)
+    np_ = max(block_n, (total + block_n - 1) // block_n * block_n)
+    st = _pad_to(starts.astype(jnp.int32)[None, :], mp, 0)
+    ct = _pad_to(counts.astype(jnp.int32)[None, :], mp, 0)
+    lp = _pad_to(lo.astype(jnp.int32)[None, :], mp, 0)
+    li, pos = pl.pallas_call(
+        functools.partial(_expand_kernel, block_n=block_n, block_m=block_m),
+        grid=(np_ // block_n, mp // block_m),
+        in_specs=[pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_m), lambda i, j: (0, j))],
+        out_specs=[pl.BlockSpec((1, block_n), lambda i, j: (0, i)),
+                   pl.BlockSpec((1, block_n), lambda i, j: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.int32),
+                   jax.ShapeDtypeStruct((1, np_), jnp.int32)],
+        interpret=interpret,
+    )(st, ct, lp)
+    return li[0, :total], pos[0, :total]
 
 
 # --------------------------------------------------------------------------- #

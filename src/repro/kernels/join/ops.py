@@ -20,16 +20,30 @@ Three layers, same math (see ``docs/kernels.md`` for the idiom):
   equivalence tests pin bit-equality), ``use_kernel=False`` forces the
   oracle.
 
-:func:`hash_probe` is the composite the executor uses: pack both sides,
-stable-sort the build side **on the host** (XLA's CPU sort is
-comparator-based and loses badly to ``np.argsort``; on TPU the sort is the
-one stage left on the host by design), probe every packed key. Returns
-``(order, lo, counts)`` exactly like the numpy reference's searchsorted
-probe, so the executors' ragged pair expansion is backend-agnostic.
+:func:`hash_probe` is the staged composite: pack both sides, stable-sort
+the build side **on the host** (XLA's CPU sort is comparator-based and
+loses badly to ``np.argsort``; on TPU the sort is the one stage left on
+the host by design), probe every packed key. Returns ``(order, lo,
+counts)`` exactly like the numpy reference's searchsorted probe, so the
+executors' ragged pair expansion is backend-agnostic.
+
+:func:`expand_pairs` is the segmented ragged expansion that used to live
+as host ``np.repeat``/``np.cumsum`` arithmetic inside the executor: ``(lo,
+counts)`` match runs -> flat ``(li, pos)`` pair indices, same three tiers.
+
+:func:`hash_join_pipeline` fuses the whole probe→expand→gather chain:
+packed keys, ``lo/counts``, expanded positions, and the gathered
+permutation rows stay device-resident between stages — the host sees the
+build sort key mid-pipeline (the sort stays on the host by design), the
+expansion-total scalar (a data-dependent output size must be known to
+allocate), and ONE final ``(li, ri)`` materialization, instead of a full
+host round trip after every stage. :func:`track_transfers` counts the
+boundary crossings so benchmarks can report them per path.
 """
 from __future__ import annotations
 
-import os
+import contextlib
+import dataclasses
 from typing import List, Sequence, Tuple
 
 import numpy as np
@@ -40,23 +54,75 @@ from repro.kernels.join import kernel, ref
 _INT64_MAX = np.iinfo(np.int64).max
 _oracle_cache: dict = {}
 
-# Auto-dispatch scalability guards (forced use_kernel=True bypasses both —
-# that's how tests pin the kernels at any shape). Read per call, like
-# dispatch.kernel_threshold, so env overrides work after import:
+# Auto-dispatch scalability guards (forced use_kernel=True bypasses all —
+# that's how tests pin the kernels at any shape). Resolved per call through
+# dispatch.envelope (env var > recorded autotune profile > default), so env
+# overrides and loaded profiles work after import:
 #
 # * the count-probe kernel does O(nl * nr) word-pair compares — a win over
 #   binary search only while the compare budget is small; past the cap the
 #   log-depth oracle is asymptotically faster even with its device hops.
 # * the gather kernel keeps the whole value table resident in one VMEM
 #   panel; past ~2M int32 rows (8 MB of the ~16 MB VMEM) it cannot tile.
+# * the expand kernel broadcast-tests O(total * n_segments) ownership
+#   pairs (the expansion-total threshold): past the cap the log-depth
+#   searchsorted oracle wins, exactly like the probe.
 
 def _probe_work_cap() -> int:
-    return int(os.environ.get("REPRO_JOIN_PROBE_WORK_CAP", str(1 << 32)))
+    return dispatch.envelope("REPRO_JOIN_PROBE_WORK_CAP", 1 << 32)
 
 
 def _gather_resident_rows() -> int:
-    return int(os.environ.get("REPRO_JOIN_GATHER_RESIDENT_ROWS",
-                              str(1 << 21)))
+    return dispatch.envelope("REPRO_JOIN_GATHER_RESIDENT_ROWS", 1 << 21)
+
+
+def _expand_work_cap() -> int:
+    return dispatch.envelope("REPRO_JOIN_EXPAND_WORK_CAP", 1 << 32)
+
+
+class ExpansionCapExceeded(RuntimeError):
+    """A ragged pair expansion would materialize more rows than the
+    caller's ``max_total`` cap (the executor maps this onto its
+    ``JoinCapExceeded``, mirroring the cartesian-product cap)."""
+
+
+# --------------------------------------------------------------------------- #
+# host-transfer accounting
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class TransferStats:
+    """Host<->device array crossings noted by the ops in this module while a
+    :func:`track_transfers` scope is active. Counts are structural (one per
+    array materialized across the boundary, scalars included) — the honest,
+    platform-independent currency of the fused pipeline's claim, measurable
+    even on a CPU container where 'device' is the XLA host backend."""
+    h2d: int = 0
+    d2h: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.h2d + self.d2h
+
+
+_transfer_scopes: List[TransferStats] = []
+
+
+@contextlib.contextmanager
+def track_transfers():
+    """Count host<->device crossings performed by ops in this scope."""
+    ts = TransferStats()
+    _transfer_scopes.append(ts)
+    try:
+        yield ts
+    finally:
+        _transfer_scopes.remove(ts)
+
+
+def _note(h2d: int = 0, d2h: int = 0) -> None:
+    for ts in _transfer_scopes:
+        ts.h2d += h2d
+        ts.d2h += d2h
 
 
 def _pad_pow2(a: np.ndarray, fill=0, min_size: int = 16) -> np.ndarray:
@@ -70,6 +136,10 @@ def _pad_pow2(a: np.ndarray, fill=0, min_size: int = 16) -> np.ndarray:
     return out
 
 
+def _pow2_len(n: int, min_size: int = 16) -> int:
+    return max(min_size, 1 << max(n - 1, 0).bit_length())
+
+
 def _oracle_fns():
     """Jitted oracle pack/search, shared by every join of every batch."""
     import jax
@@ -78,6 +148,40 @@ def _oracle_fns():
         _oracle_cache.update(pack=jax.jit(ref.pack_keys),
                              search=jax.jit(ref.probe_sorted))
     return _oracle_cache["pack"], _oracle_cache["search"]
+
+
+_pipe_cache: dict = {}
+
+
+def _pipe_fns():
+    """Jitted device helpers for the fused pipeline (and the oracle tiers
+    of the granular expand op) — tiny glue ops that keep intermediates on
+    the device between kernel stages instead of punting to host numpy."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    if not _pipe_cache:
+        @functools.partial(jax.jit, static_argnames=("n", "fill"))
+        def pad_to(a, *, n, fill):
+            if n <= a.shape[0]:
+                return a
+            return jnp.concatenate(
+                [a, jnp.full((n - a.shape[0],), fill, a.dtype)])
+
+        _pipe_cache.update(
+            take=jax.jit(lambda a, i: a[i]),
+            sub=jax.jit(lambda a, b: a - b),
+            clamp=jax.jit(lambda x, n: jnp.minimum(x, n)),
+            total64=jax.jit(lambda c: jnp.sum(c.astype(jnp.int64))),
+            starts=jax.jit(lambda c: jnp.cumsum(c) - c),
+            join_words=jax.jit(lambda hi, lo: (hi.astype(jnp.int64) << 32)
+                               | lo.astype(jnp.uint32).astype(jnp.int64)),
+            expand=jax.jit(ref.expand_pairs, static_argnames=("total",)),
+            pad_to=pad_to,
+        )
+    return _pipe_cache
 
 
 def _split_words(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -112,9 +216,11 @@ def pack_keys(cols: np.ndarray, *, use_kernel: bool | None = None,
         from jax.experimental import enable_x64
         with enable_x64():
             pack, _ = _oracle_fns()
+            _note(h2d=1, d2h=1)
             return np.asarray(pack(cols.astype(np.int64)))
     hi, lo = kernel.pack_keys_pallas(cols.astype(np.int32),
                                      interpret=interpret)
+    _note(h2d=1, d2h=2)
     return _join_words(np.asarray(hi), np.asarray(lo))
 
 
@@ -137,11 +243,13 @@ def probe_sorted(build_sorted: np.ndarray, probe: np.ndarray, *,
         from jax.experimental import enable_x64
         with enable_x64():
             _, search = _oracle_fns()
+            _note(h2d=2, d2h=2)
             lo, hi = search(build_sorted, probe)
             return np.asarray(lo), np.asarray(hi)
     bh, bl = _split_words(build_sorted)
     ph, pl_ = _split_words(probe)
     lo, hi = kernel.probe_sorted_pallas(bh, bl, ph, pl_, interpret=interpret)
+    _note(h2d=4, d2h=2)
     return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
 
 
@@ -194,6 +302,7 @@ def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
     got = kernel.gather_rows_pallas(values.astype(np.int32),
                                     idx.astype(np.int32), fill=fill,
                                     interpret=interpret)
+    _note(h2d=2, d2h=1)
     return np.asarray(got).astype(values.dtype if values.size else np.int32)
 
 
@@ -235,9 +344,11 @@ def hash_probe_oracle(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray],
     nl, nr = len(lcs[0]), len(rcs[0])
     with enable_x64():
         pack, search = _oracle_fns()
+        _note(h2d=2, d2h=2)
         lk = np.asarray(pack(_pad_pow2(np.stack(lcs, axis=1))))[:nl]
         rk = np.asarray(pack(_pad_pow2(np.stack(rcs, axis=1))))[:nr]
         order = np.argsort(rk, kind="stable")
+        _note(h2d=2, d2h=2)
         lo_j, hi_j = search(_pad_pow2(rk[order], fill=_INT64_MAX),
                             _pad_pow2(lk, fill=_INT64_MAX))
     lo = np.minimum(np.asarray(lo_j)[:nl], nr)
@@ -271,11 +382,291 @@ def hash_probe(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray], *,
         np.stack(lcs, axis=1).astype(np.int32), interpret=interpret)
     rh, rl = kernel.pack_keys_pallas(
         np.stack(rcs, axis=1).astype(np.int32), interpret=interpret)
+    _note(h2d=2, d2h=4)
     lh, ll = np.asarray(lh), np.asarray(ll)
     rh, rl = np.asarray(rh), np.asarray(rl)
     # stable build-side sort on the host, by the recombined int64 key
     order = np.argsort(_join_words(rh, rl), kind="stable")
     lo, hi = kernel.probe_sorted_pallas(rh[order], rl[order], lh, ll,
                                         interpret=interpret)
+    _note(h2d=4, d2h=2)
     lo = np.asarray(lo, np.int64)
     return order, lo, np.asarray(hi, np.int64) - lo
+
+
+# --------------------------------------------------------------------------- #
+# segmented ragged expansion
+# --------------------------------------------------------------------------- #
+
+def expand_pairs_numpy(lo: np.ndarray, counts: np.ndarray,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """The host expansion — the executor's original addressing arithmetic:
+    ``li`` repeats each segment id ``counts[i]`` times; ``pos`` walks
+    ``lo[i], lo[i]+1, ...`` within each run."""
+    lo = np.asarray(lo, np.int64)
+    counts = np.asarray(counts, np.int64)
+    n = counts.shape[0]
+    total = int(counts.sum())
+    li = np.repeat(np.arange(n, dtype=np.int64), counts)
+    starts = np.cumsum(counts) - counts
+    offs = np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+    pos = np.repeat(lo, counts) + offs
+    return li, pos
+
+
+def _expand_pairs_oracle(lo: np.ndarray, counts: np.ndarray, total: int,
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """The jitted searchsorted expansion, pow2-padded for stable jit
+    buckets. Zero-fill padding segments own no output index, and padded
+    output indices past ``total`` resolve to the last padding segment —
+    both sliced off on the way out."""
+    from jax.experimental import enable_x64
+
+    n = counts.shape[0]
+    with enable_x64():
+        fns = _pipe_fns()
+        _note(h2d=2, d2h=2)
+        li, pos = fns["expand"](_pad_pow2(lo), _pad_pow2(counts),
+                                total=_pow2_len(total))
+        return (np.asarray(li)[:total].astype(np.int64),
+                np.asarray(pos)[:total].astype(np.int64))
+
+
+def expand_pairs(lo: np.ndarray, counts: np.ndarray, *,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None,
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Segmented ragged expansion of per-probe-row ``(lo, counts)`` match
+    runs into flat ``(li, pos)`` pair indices (``li[j]`` = probe row owning
+    output ``j``; ``pos[j]`` = its match's position in the build sort
+    order). Same three tiers as the probe; the kernel's ownership test is
+    O(total * n_segments), so auto dispatch falls back to the log-depth
+    searchsorted oracle past the expand work cap."""
+    lo = np.asarray(lo, np.int64)
+    counts = np.asarray(counts, np.int64)
+    n = counts.shape[0]
+    total = int(counts.sum())
+    auto = use_kernel is None
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             max(total, n), hot_path=True)
+    if use_kernel and auto and total * max(n, 1) > _expand_work_cap():
+        use_kernel = False             # ownership-test budget exceeded
+    if use_kernel:
+        # the kernel carries runs as int32; out-of-envelope runs would
+        # silently truncate, so auto falls back and forced raises.
+        in_envelope = (total < 1 << 31 and n < 1 << 31
+                       and (n == 0 or (int((lo + counts).max()) <= 1 << 31
+                                       and int(lo.min()) >= 0)))
+        if not in_envelope:
+            if not auto:
+                raise ValueError("expand kernel requires int32-range runs")
+            use_kernel = False
+    if not use_kernel:
+        if auto and not dispatch.on_tpu():
+            return expand_pairs_numpy(lo, counts)
+        return _expand_pairs_oracle(lo, counts, total)
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    starts = np.cumsum(counts) - counts
+    _note(h2d=3, d2h=2)
+    li, pos = kernel.expand_pairs_pallas(
+        _pad_pow2(starts.astype(np.int32)), _pad_pow2(counts.astype(np.int32)),
+        _pad_pow2(lo.astype(np.int32)), total=_pow2_len(total),
+        interpret=interpret)
+    return (np.asarray(li)[:total].astype(np.int64),
+            np.asarray(pos)[:total].astype(np.int64))
+
+
+def expand_segment_ids(counts: np.ndarray, *, use_kernel: bool | None = None,
+                       interpret: bool | None = None) -> np.ndarray:
+    """``np.repeat(np.arange(len(counts)), counts)`` through the same
+    dispatch seam — the segment-id half of the expansion, used by the
+    executor's federation bincount build."""
+    counts = np.asarray(counts, np.int64)
+    li, _ = expand_pairs(np.zeros_like(counts), counts,
+                         use_kernel=use_kernel, interpret=interpret)
+    return li
+
+
+# --------------------------------------------------------------------------- #
+# the fused probe -> expand -> gather pipeline
+# --------------------------------------------------------------------------- #
+
+def _check_total(total: int, max_total: "int | None") -> None:
+    if max_total is not None and total > max_total:
+        raise ExpansionCapExceeded(
+            f"hash-join ragged expansion would materialize {total} rows, "
+            f"above the {max_total}-row cap")
+
+
+_EMPTY_PAIR = (np.empty(0, np.int64), np.empty(0, np.int64), 0)
+
+
+def _pipeline_numpy(lcs, rcs, max_total):
+    """Pure-host pipeline: zero boundary crossings, what auto serves on
+    CPU. The cap check sits between probe and expansion, exactly where the
+    device tiers check it — nothing is materialized past the cap."""
+    order, lo, counts = hash_probe_numpy(lcs, rcs)
+    total = int(counts.sum())
+    _check_total(total, max_total)
+    if total == 0:
+        return _EMPTY_PAIR
+    li, pos = expand_pairs_numpy(lo, counts)
+    return li, order[pos], total
+
+
+def _pipeline_oracle(lcs, rcs, max_total):
+    """Device-resident jitted-jnp pipeline. Boundary crossings: two key
+    uploads, the build sort key down + the order back up (the sort stays
+    on the host by design), the expansion-total scalar down, and the final
+    ``(li, ri)`` pair down — 7, vs the staged oracle composite's 12 plus
+    its full intermediate arrays."""
+    from jax.experimental import enable_x64
+
+    import jax.numpy as jnp
+
+    nl, nr = len(lcs[0]), len(rcs[0])
+    with enable_x64():
+        pack, search = _oracle_fns()
+        fns = _pipe_fns()
+        _note(h2d=2)
+        lk_d = pack(_pad_pow2(np.stack(lcs, axis=1)))          # (nl pow2,)
+        rk_d = pack(_pad_pow2(np.stack(rcs, axis=1)))          # (nr pow2,)
+        _note(d2h=1)
+        rk = np.asarray(rk_d)[:nr]
+        order = np.argsort(rk, kind="stable")
+        _note(h2d=1)
+        order_d = jnp.asarray(order)
+        build_d = fns["pad_to"](fns["take"](rk_d[:nr], order_d),
+                                n=_pow2_len(nr), fill=int(_INT64_MAX))
+        lo_j, hi_j = search(build_d, lk_d)
+        lo_d = fns["clamp"](lo_j[:nl], nr)
+        counts_d = fns["sub"](fns["clamp"](hi_j[:nl], nr), lo_d)
+        _note(d2h=1)
+        total = int(fns["total64"](counts_d))
+        _check_total(total, max_total)
+        if total == 0:
+            return _EMPTY_PAIR
+        mp = _pow2_len(nl)
+        li_d, pos_d = fns["expand"](fns["pad_to"](lo_d, n=mp, fill=0),
+                                    fns["pad_to"](counts_d, n=mp, fill=0),
+                                    total=_pow2_len(total))
+        ri_d = fns["take"](order_d, pos_d[:total])
+        _note(d2h=2)
+        return (np.asarray(li_d[:total]).astype(np.int64),
+                np.asarray(ri_d).astype(np.int64), total)
+
+
+def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
+    """Kernel pipeline: pack/probe/expand/gather as Pallas kernels with
+    device-resident word-pair intermediates; per-stage scaling-envelope
+    fallbacks swap in the jitted jnp form of that one stage *on device*
+    instead of dropping the whole join to the host. Boundary crossings:
+    two key-column uploads, the recombined sort key down + the order back
+    up, the total scalar down, the final pair down — 7, vs the staged
+    all-kernel composite's 20."""
+    from jax.experimental import enable_x64
+
+    import jax.numpy as jnp
+
+    nl, nr = len(lcs[0]), len(rcs[0])
+    auto = use_kernel is None
+    use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
+                                             max(nl, nr), hot_path=True)
+    if not use_kernel:
+        if auto and not dispatch.on_tpu():
+            return _pipeline_numpy(lcs, rcs, max_total)
+        return _pipeline_oracle(lcs, rcs, max_total)
+    fns = _pipe_fns()
+    _note(h2d=2)
+    lh, ll = kernel.pack_keys_pallas(
+        np.stack(lcs, axis=1).astype(np.int32), interpret=interpret)
+    rh, rl = kernel.pack_keys_pallas(
+        np.stack(rcs, axis=1).astype(np.int32), interpret=interpret)
+    # build-side sort on the host by design: the recombined int64 key is
+    # the one mid-pipeline materialization, the order the one extra upload
+    with enable_x64():
+        rk_d = fns["join_words"](rh, rl)
+    _note(d2h=1)
+    order = np.argsort(np.asarray(rk_d), kind="stable")
+    _note(h2d=1)
+    order_d = jnp.asarray(order.astype(np.int32))
+    rh_s = fns["take"](rh, order_d)
+    rl_s = fns["take"](rl, order_d)
+    if auto and nl * nr > _probe_work_cap():
+        # compare budget exceeded: this stage runs as the device oracle
+        with enable_x64():
+            _, search = _oracle_fns()
+            lo_j, hi_j = search(rk_d[order_d],
+                                fns["join_words"](lh, ll))
+        lo_d = lo_j.astype(jnp.int32)
+        counts_d = fns["sub"](hi_j, lo_j).astype(jnp.int32)
+    else:
+        lo_d, hi_d = kernel.probe_sorted_pallas(rh_s, rl_s, lh, ll,
+                                                interpret=interpret)
+        counts_d = fns["sub"](hi_d, lo_d)
+    with enable_x64():
+        _note(d2h=1)
+        total = int(fns["total64"](counts_d))
+    _check_total(total, max_total)
+    if total == 0:
+        return _EMPTY_PAIR
+    if total >= 1 << 31 or nr >= 1 << 31:
+        # past the int32 envelope no device stage can carry the expansion;
+        # finish on the host (auto would normally cap out long before this)
+        lo_h = np.asarray(lo_d).astype(np.int64)
+        ct_h = np.asarray(counts_d).astype(np.int64)
+        li, pos = expand_pairs_numpy(lo_h, ct_h)
+        return li, order[pos].astype(np.int64), total
+    tp = _pow2_len(total)
+    if auto and total * nl > _expand_work_cap():
+        # ownership-test budget exceeded: searchsorted oracle, on device
+        mp = _pow2_len(nl)
+        li_d, pos_d = fns["expand"](fns["pad_to"](lo_d, n=mp, fill=0),
+                                    fns["pad_to"](counts_d, n=mp, fill=0),
+                                    total=tp)
+        li_d, pos_d = li_d[:total], pos_d[:total]
+    else:
+        starts_d = fns["starts"](counts_d)
+        li_d, pos_d = kernel.expand_pairs_pallas(starts_d, counts_d, lo_d,
+                                                 total=tp,
+                                                 interpret=interpret)
+        li_d, pos_d = li_d[:total], pos_d[:total]
+    if auto and nr > _gather_resident_rows():
+        ri_d = fns["take"](order_d, pos_d)     # table too big for one panel
+    else:
+        ri_d = kernel.gather_rows_pallas(order_d, pos_d, interpret=interpret)
+    _note(d2h=2)
+    return (np.asarray(li_d).astype(np.int64),
+            np.asarray(ri_d).astype(np.int64), total)
+
+
+def hash_join_pipeline(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray],
+                       *, mode: str = "auto",
+                       use_kernel: bool | None = None,
+                       interpret: bool | None = None,
+                       max_total: "int | None" = None,
+                       ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Fused probe→expand→gather: key columns in, final ``(li, ri, total)``
+    pair indices out (``li`` probe-side row ids, ``ri`` build-side row ids,
+    both int64). Intermediates stay device-resident between stages on the
+    device tiers; ``max_total`` caps the expansion *before* it is
+    materialized (:class:`ExpansionCapExceeded`).
+
+    ``mode`` picks the tier: ``"numpy"`` (pure host), ``"oracle"``
+    (device-resident jitted jnp), ``"pallas"`` (kernels; per-stage envelope
+    fallbacks stay on device), or ``"auto"`` (pallas on TPU, numpy on CPU —
+    the same policy the granular ops resolve per stage)."""
+    if mode not in ("auto", "numpy", "oracle", "pallas"):
+        raise ValueError(f"unknown pipeline mode: {mode!r}")
+    assert len(lcs) <= 2 and len(rcs) <= 2, "reduce key columns first"
+    nl, nr = len(lcs[0]), len(rcs[0])
+    if nl == 0 or nr == 0:
+        return _EMPTY_PAIR
+    if mode == "auto":
+        mode = "pallas" if dispatch.on_tpu() else "numpy"
+    if mode == "numpy":
+        return _pipeline_numpy(lcs, rcs, max_total)
+    if mode == "oracle":
+        return _pipeline_oracle(lcs, rcs, max_total)
+    return _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the hash-join pack/probe/gather kernel family.
+"""Pure-jnp oracle for the hash-join pack/probe/expand/gather kernel family.
 
 This is the same math the executor's pre-Pallas jitted path runs (and the
 numpy reference backend, modulo device): packed int64 keys, binary-search
@@ -28,6 +28,25 @@ def probe_sorted(build_sorted: jnp.ndarray, probe: jnp.ndarray,
     lo = jnp.searchsorted(build_sorted, probe, side="left")
     hi = jnp.searchsorted(build_sorted, probe, side="right")
     return lo, hi
+
+
+def expand_pairs(lo: jnp.ndarray, counts: jnp.ndarray, total: int,
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Segmented ragged expansion of ``(lo, counts)`` match runs into flat
+    ``(li, pos)`` pair indices — the jnp form of the executor's former
+    ``np.repeat``/``np.cumsum`` addressing arithmetic.
+
+    ``starts`` (exclusive cumsum) partitions ``[0, counts.sum())`` into
+    runs; output ``j``'s owner is the *last* segment whose start is ``<=
+    j`` (``searchsorted`` right minus one — duplicate starts from
+    zero-count segments resolve to the one segment that actually owns
+    ``j``). ``total`` is static for jit; indices past ``counts.sum()``
+    resolve to the last segment and must be sliced off by the caller."""
+    starts = jnp.cumsum(counts) - counts
+    j = jnp.arange(total, dtype=counts.dtype)
+    seg = jnp.searchsorted(starts, j, side="right") - 1
+    pos = lo[seg] + j - starts[seg]
+    return seg, pos
 
 
 def gather_rows(values: jnp.ndarray, idx: jnp.ndarray, *,

@@ -44,8 +44,9 @@ DEFAULT_MAX_JOIN_ROWS = 50_000_000
 
 
 class JoinCapExceeded(RuntimeError):
-    """A cartesian-product join step would materialize more rows than the
-    executor's ``max_join_rows`` cap."""
+    """A join step — cartesian product or ragged hash-join expansion —
+    would materialize more rows than the executor's ``max_join_rows``
+    cap."""
 
 
 @dataclasses.dataclass
@@ -83,12 +84,13 @@ class ExecStats:
     messages: int = 0
     rows: int = 0
     cartesian_rows: int = 0            # cross-product rows materialized
+    expanded_rows: int = 0             # ragged hash-join pairs materialized
     wall_s: float = 0.0                # actual local execution time (info)
 
     # every field that must agree between backends / profile re-accounting
     COMPARABLE = ("scan_rows_critical", "join_rows", "distributed_joins",
                   "rows_shipped", "bytes_shipped", "messages", "rows",
-                  "cartesian_rows")
+                  "cartesian_rows", "expanded_rows")
 
     def modeled_time(self, net: NetworkModel | None = None) -> float:
         net = net or NetworkModel()
@@ -154,6 +156,19 @@ def _cartesian_indices(nl: int, nr: int, stats: ExecStats,
     return li, ri
 
 
+def _check_expansion(total: int, stats: ExecStats, max_rows: int) -> int:
+    """Cap + account the data-dependent ragged hash-join expansion, exactly
+    like the cartesian path: the check fires before any pair array is
+    materialized."""
+    if total > max_rows:
+        raise JoinCapExceeded(
+            f"hash-join expansion would materialize {total} rows, above "
+            f"the {max_rows}-row cap; raise Executor(max_join_rows=...) "
+            "or add a more selective pattern")
+    stats.expanded_rows += total
+    return total
+
+
 def _key_columns(table: Bindings, cols: Bindings, shared: Sequence[int],
                  ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
     """Shared-var key columns, reduced to at most two int64 columns.
@@ -194,10 +209,12 @@ def _join_numpy(table: Optional[Bindings], pat, rows: np.ndarray,
     else:
         lcs, rcs = _key_columns(table, cols, shared)
         order, lo, counts = join_ops.hash_probe_numpy(lcs, rcs)
+        total = _check_expansion(int(counts.sum()), stats, max_rows)
         li = np.repeat(np.arange(len(lo)), counts)
         ri_parts = [order[l:h] for l, h in zip(lo, lo + counts) if h > l]
         ri = (np.concatenate(ri_parts) if ri_parts
               else np.empty(0, dtype=np.int64))
+        assert len(ri) == total
     out: Bindings = {v: c[li] for v, c in table.items()}
     for v, c in cols.items():
         if v not in out:
@@ -290,47 +307,28 @@ class NumpyExecutor:
 # jax backend — batched execution
 # --------------------------------------------------------------------------- #
 
-# A probe spec names the backend that packs keys and binary-searches the
-# sorted build side; all three implementations live in
-# repro.kernels.join.ops: ("numpy", None) — host searchsorted, no device
-# round trip; ("oracle", None) — the jitted-jnp kernels (pow2-padded,
-# enable_x64); ("pallas", force) — the Pallas word-pair kernels under the
-# shared kernels.dispatch policy (force: None=auto, True/False pin a path).
+# A probe spec names the backend tier of the fused join pipeline
+# (``join.ops.hash_join_pipeline``): ("numpy", None) — pure host, no device
+# round trip; ("oracle", None) — device-resident jitted-jnp stages
+# (pow2-padded, enable_x64); ("pallas", force) — the Pallas word-pair
+# kernel stages under the shared kernels.dispatch policy (force: None=auto,
+# True/False pin a path).
 ProbeSpec = Tuple[str, Optional[bool]]
-
-
-def _probe(table: Bindings, cols: Bindings, shared,
-           probe: ProbeSpec) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Hash-probe: pack shared-var columns into int64 keys, sort the build
-    side, binary-search every probe key. Returns ``(order, lo, counts)``.
-
-    The implementations live in ``repro.kernels.join`` and follow the
-    repo-wide kernel/fallback dispatch idiom (``repro.kernels.dispatch``,
-    ``docs/kernels.md``): compiled Pallas kernels on TPU, ``interpret=True``
-    only when forced (tests pin bit-equality that way), jnp oracle /
-    host-numpy fallbacks elsewhere. The build-side sort always stays on
-    the host (XLA's CPU sort is comparator-based and loses badly to
-    ``np.argsort``)."""
-    from repro.kernels.join import ops as join_ops
-
-    lcs, rcs = _key_columns(table, cols, shared)
-    mode, force = probe
-    if mode == "pallas":
-        return join_ops.hash_probe(lcs, rcs, use_kernel=force)
-    if mode == "oracle":
-        return join_ops.hash_probe_oracle(lcs, rcs)
-    return join_ops.hash_probe_numpy(lcs, rcs)
 
 
 def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
               stats: ExecStats, max_rows: int, probe: ProbeSpec,
               cols: Optional[Bindings] = None) -> Optional[Bindings]:
-    """Same join semantics as :func:`_join_numpy`, with the key packing and
-    the searchsorted hash-probe vectorized via :func:`_probe` (int64 math —
-    packed keys overflow int32 — carried as 32-bit word pairs on the Pallas
-    path). The data-dependent ragged expansion stays in numpy addressing
-    arithmetic; its final gather through the build-side sort permutation is
-    kernel-dispatched on the Pallas path."""
+    """Same join semantics as :func:`_join_numpy`, with the whole
+    probe→expand→gather chain fused into ``join.ops.hash_join_pipeline``:
+    packed keys (int64 math — carried as 32-bit word pairs on the Pallas
+    path), match runs, expanded pair positions, and the gathered build-side
+    permutation stay device-resident between stages on the device tiers —
+    the host sees one final ``(li, ri)`` materialization. The pipeline
+    enforces ``max_rows`` on the data-dependent expansion total before any
+    pair array exists, mirroring the cartesian cap."""
+    from repro.kernels.join import ops as join_ops
+
     cols = _pattern_cols(pat, rows) if cols is None else cols
     if table is None:
         return cols
@@ -339,26 +337,16 @@ def _join_jax(table: Optional[Bindings], pat, rows: np.ndarray,
         nl, nr = _table_len(table), len(next(iter(cols.values())))
         li, ri = _cartesian_indices(nl, nr, stats, max_rows)
     else:
-        nl = _table_len(table)
-        order, lo, counts = _probe(table, cols, shared, probe)
-        # per-left-row expansion of order[lo:hi] (matches the numpy backend's
-        # pair enumeration order exactly)
-        total = int(counts.sum())
-        li = np.repeat(np.arange(nl), counts)
-        starts = np.cumsum(counts) - counts
-        offs = np.arange(total) - np.repeat(starts, counts)
-        pos = np.repeat(lo, counts) + offs
-        if probe[0] == "pallas":
-            # the op owns the whole dispatch (kernel on TPU within the
-            # VMEM-residency cap, single-pass host gather otherwise);
-            # `order` is the build-side sort permutation, so its int32
-            # envelope is proven by its length — no min/max table scan
-            from repro.kernels.join import ops as join_ops
-            ri = join_ops.gather_rows(order, pos, use_kernel=probe[1],
-                                      assume_inbounds=True,
-                                      bounded_by_len=True)
-        else:
-            ri = order[pos]
+        lcs, rcs = _key_columns(table, cols, shared)
+        mode, force = probe
+        try:
+            li, ri, total = join_ops.hash_join_pipeline(
+                lcs, rcs, mode=mode, use_kernel=force, max_total=max_rows)
+        except join_ops.ExpansionCapExceeded as e:
+            raise JoinCapExceeded(
+                f"{e}; raise Executor(max_join_rows=...) or add a more "
+                "selective pattern") from None
+        stats.expanded_rows += total
     out: Bindings = {v: c[li] for v, c in table.items()}
     for v, c in cols.items():
         if v not in out:
@@ -375,12 +363,17 @@ def _federation_bincounts(shard_ids_list: Sequence[np.ndarray],
     ``read_shard`` gather when the layout holds read copies)."""
     import jax.numpy as jnp
 
+    from repro.kernels.join import ops as join_ops
+
     if not shard_ids_list:
         return np.zeros((0, n_shards), np.int64)
     lens = np.array([len(i) for i in shard_ids_list], np.int64)
     if lens.sum() == 0:
         return np.zeros((len(shard_ids_list), n_shards), np.int64)
-    seg = np.repeat(np.arange(len(shard_ids_list)), lens)
+    # the segment build is the same segmented ragged expansion as the join's
+    # pair expansion (segment id per flat output slot), through the same
+    # dispatch seam: host numpy on CPU, device tiers on TPU
+    seg = join_ops.expand_segment_ids(lens)
     shard_ids = np.concatenate(
         [np.asarray(i, np.int32) for i in shard_ids_list])
     out = jnp.zeros((len(shard_ids_list), n_shards), jnp.int32)
@@ -566,6 +559,7 @@ def profile_from_plan(plan: qplan.QueryPlan, store,
             break
     prof.rows = _table_len(table)
     prof.cartesian_rows = stats.cartesian_rows
+    prof.expanded_rows = stats.expanded_rows
     return prof
 
 

@@ -208,6 +208,7 @@ class QueryProfile:
     rows: int
     n_patterns: int                    # len(q.patterns), for dj accounting
     cartesian_rows: int = 0            # cross-product rows materialized
+    expanded_rows: int = 0             # ragged hash-join pairs materialized
 
 
 def stats_from_profile(q: Query, prof: QueryProfile, space, state,
@@ -225,7 +226,8 @@ def stats_from_profile(q: Query, prof: QueryProfile, space, state,
     matches ship from their primary."""
     from repro.query.exec import ExecStats
     stats = ExecStats(join_rows=prof.join_rows, rows=prof.rows,
-                      cartesian_rows=prof.cartesian_rows)
+                      cartesian_rows=prof.cartesian_rows,
+                      expanded_rows=prof.expanded_rows)
     ppn = primary_shard(q, space, state, replicas)
     on_ppn = (replicas.on_shard(ppn)
               if replicas is not None and owners is not None

@@ -160,6 +160,64 @@ def test_three_shared_vars_join_is_exact(make):
     assert canon_bindings(bindings) == []
 
 
+def _ragged_fixture():
+    """Two patterns whose shared variable always binds the same entity:
+    the hash-join expansion materializes |m0| x |m1| pairs without being a
+    cartesian plan op (every probe row matches every build row)."""
+    d = Dictionary()
+    for i in range(40):
+        d.encode(f"t{i}")
+    p, q_, hub = 1, 2, 5
+    rows = [[3 + i, p, hub] for i in range(20)]
+    rows += [[25 + j, q_, hub] for j in range(12)]
+    store = build_store(np.array(rows, np.int32), d)
+    space = FeatureSpace(store)
+    x, y, z = var(0), var(1), var(2)
+    q = Query(name="H", patterns=((x, p, y), (z, q_, y)))
+    state = hash_partition(space.feature_sizes(), 3, seed=0)
+    return q, engine.ShardedStore(store, space, state), 20 * 12
+
+
+@pytest.mark.parametrize("make", [
+    qexec.NumpyExecutor,
+    qexec.JaxExecutor,
+    lambda **kw: qexec.JaxExecutor(probe_kernel=True, **kw),
+    lambda **kw: qexec.JaxExecutor(pallas=True, probe_kernel=True, **kw),
+])
+def test_ragged_expansion_cap_enforced(make):
+    """The ragged hash-join expansion honors max_join_rows exactly like the
+    cartesian path — clear error just under the total, expanded_rows
+    surfaced in ExecStats at or above it — on every backend tier."""
+    q, sharded, n = _ragged_fixture()
+    plan = qplan.plan(q, sharded)
+    assert not plan.ops[1].cartesian
+
+    _, stats = make().run(plan, sharded)          # under the default cap
+    assert stats.expanded_rows == n
+    assert stats.rows == n
+    assert stats.cartesian_rows == 0
+
+    with pytest.raises(qexec.JoinCapExceeded, match=f"{n} rows"):
+        make(max_join_rows=n - 1).run(plan, sharded)
+    _, at_cap = make(max_join_rows=n).run(plan, sharded)
+    assert at_cap.expanded_rows == n
+
+
+def test_ragged_expansion_rows_profiled():
+    """profile_from_plan records the expansion total and stats_from_profile
+    re-accounts it — the COMPARABLE contract covers expanded_rows."""
+    q, sharded, n = _ragged_fixture()
+    plan = qplan.plan(q, sharded)
+    with pytest.raises(qexec.JoinCapExceeded):
+        qexec.profile_from_plan(plan, sharded.store, max_join_rows=n - 1)
+    prof = qexec.profile_from_plan(plan, sharded.store)
+    assert prof.expanded_rows == n
+    est = qplan.stats_from_profile(q, prof, sharded.space, sharded.state,
+                                   sharded.triple_shard)
+    assert est.expanded_rows == n
+    assert "expanded_rows" in qexec.ExecStats.COMPARABLE
+
+
 def test_profile_honors_configured_join_cap(small_lubm):
     """The executor's max_join_rows threads through KGService into the
     facade's profiling, so adaptation never rejects a workload the serving

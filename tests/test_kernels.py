@@ -3,8 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
-from repro.kernels import dispatch
+from repro.kernels import autotune, dispatch
 from repro.kernels.flash_attention import kernel as fk
 from repro.kernels.flash_attention import ops as fops
 from repro.kernels.flash_attention import ref as fref
@@ -322,3 +324,270 @@ def test_join_kernel_contract_guards(rng):
     got = jops.gather_rows(small, idx, use_kernel=True, interpret=True)
     assert got.dtype == small.dtype
     np.testing.assert_array_equal(got, small[idx])
+
+
+def test_join_probe_keys_in_padded_tail():
+    """Regression for the pow2-pad clip (`lo/hi` clamped to nr): probe keys
+    sorting past every real build key — including the maximum legal packed
+    key (2^62-1), the closest a key gets to the oracle's int64-max fill and
+    the word-pair +inf sentinel — must come back with lo == hi == nr on all
+    three tiers, never a phantom match against the padding."""
+    top = MAXID                                       # max per-column id
+    # non-pow2 build size -> real padding tail on the jitted/pallas tiers
+    rcs = [np.arange(3, 20, dtype=np.int64),
+           np.arange(17, dtype=np.int64)]
+    nr = len(rcs[0])
+    # probe keys strictly above every build key, up to the (2^62)-1 envelope
+    lcs = [np.array([top, top, MAXID // 2 + 1], np.int64),
+           np.array([top, 0, 0], np.int64)]
+    ref_order, ref_lo, ref_counts = jops.hash_probe_numpy(lcs, rcs)
+    assert (ref_counts == 0).all() and (ref_lo == nr).all()
+    for tier, got in (
+            ("oracle", jops.hash_probe_oracle(lcs, rcs)),
+            ("pallas", jops.hash_probe(lcs, rcs, use_kernel=True,
+                                       interpret=True)),
+            ("auto", jops.hash_probe(lcs, rcs))):
+        order, lo, counts = got
+        np.testing.assert_array_equal(order, ref_order, err_msg=tier)
+        np.testing.assert_array_equal(lo, ref_lo, err_msg=tier)
+        np.testing.assert_array_equal(counts, ref_counts, err_msg=tier)
+    # a probe key *equal* to a build key that sits at the padded boundary
+    # still matches exactly once
+    lcs_eq = [rcs[0][-1:].copy(), rcs[1][-1:].copy()]
+    for kw in ({}, {"use_kernel": True, "interpret": True}):
+        _, lo, counts = jops.hash_probe(lcs_eq, rcs, **kw)
+        assert counts[0] == 1 and lo[0] == nr - 1
+
+
+# --------------------------------------------------------------------------- #
+# segmented ragged expansion + the fused pipeline
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**20))
+def test_expand_tiers_bit_identical(seed):
+    """Property: the expansion kernel (interpret), the jitted searchsorted
+    oracle, and host numpy return bit-identical int64 (li, pos) for random
+    ragged runs. The pinned seeds cover the degenerate shapes: an empty run
+    list, all-zero counts, and a single owning run; random draws from
+    [0, 4) keep interior zero-count segments frequent."""
+    rng = np.random.default_rng(seed)
+    sel = seed % 5
+    if sel == 0:
+        counts = np.zeros(0, np.int64)                 # empty run list
+    elif sel == 1:
+        counts = np.zeros(6, np.int64)                 # all-zero counts
+    elif sel == 2:
+        counts = np.array([0, 0, 9, 0], np.int64)      # single-run total
+    else:
+        counts = rng.integers(0, 4, int(rng.integers(1, 40)))
+    counts = np.asarray(counts, np.int64)
+    lo = rng.integers(0, 1000, len(counts)).astype(np.int64)
+    ref_li, ref_pos = jops.expand_pairs_numpy(lo, counts)
+    for kw in ({}, {"use_kernel": False},
+               {"use_kernel": True, "interpret": True}):
+        li, pos = jops.expand_pairs(lo, counts, **kw)
+        assert li.dtype == np.int64 and pos.dtype == np.int64, kw
+        np.testing.assert_array_equal(li, ref_li, err_msg=str(kw))
+        np.testing.assert_array_equal(pos, ref_pos, err_msg=str(kw))
+
+
+def test_expand_segment_ids_matches_repeat(rng):
+    lens = rng.integers(0, 9, 23).astype(np.int64)
+    np.testing.assert_array_equal(jops.expand_segment_ids(lens),
+                                  np.repeat(np.arange(23), lens))
+
+
+def test_expand_kernel_contract_guards():
+    """Forced kernel rejects out-of-int32-envelope runs (positions would
+    truncate); auto serves a fallback tier instead."""
+    lo = np.array([1 << 33], np.int64)
+    counts = np.array([2], np.int64)
+    with pytest.raises(ValueError, match="int32"):
+        jops.expand_pairs(lo, counts, use_kernel=True, interpret=True)
+    li, pos = jops.expand_pairs(lo, counts)            # auto -> host tier
+    np.testing.assert_array_equal(pos, [1 << 33, (1 << 33) + 1])
+    np.testing.assert_array_equal(li, [0, 0])
+
+
+def _pipeline_fixture(rng, nl=257, nr=190):
+    lcs = [rng.integers(0, 40, nl).astype(np.int64),
+           rng.integers(0, 5, nl).astype(np.int64)]
+    rcs = [rng.integers(0, 40, nr).astype(np.int64),
+           rng.integers(0, 5, nr).astype(np.int64)]
+    order, lo, counts = jops.hash_probe_numpy(lcs, rcs)
+    li, pos = jops.expand_pairs_numpy(lo, counts)
+    return lcs, rcs, (li, order[pos], int(counts.sum()))
+
+
+def test_join_pipeline_tiers_match_staged_reference(rng):
+    """Every fused-pipeline tier reproduces the staged probe+expand+gather
+    reference bit-exactly (pair enumeration order included)."""
+    lcs, rcs, (ref_li, ref_ri, ref_total) = _pipeline_fixture(rng)
+    assert ref_total > 0
+    for mode, kw in (("numpy", {}), ("oracle", {}), ("auto", {}),
+                     ("pallas", {"use_kernel": True, "interpret": True})):
+        li, ri, total = jops.hash_join_pipeline(lcs, rcs, mode=mode, **kw)
+        assert total == ref_total, mode
+        assert li.dtype == np.int64 and ri.dtype == np.int64, mode
+        np.testing.assert_array_equal(li, ref_li, err_msg=mode)
+        np.testing.assert_array_equal(ri, ref_ri, err_msg=mode)
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        jops.hash_join_pipeline(lcs, rcs, mode="cuda")
+
+
+def test_join_pipeline_empty_sides(rng):
+    empty = [np.empty(0, np.int64), np.empty(0, np.int64)]
+    full = [rng.integers(0, 9, 8).astype(np.int64),
+            rng.integers(0, 9, 8).astype(np.int64)]
+    for lcs, rcs in ((empty, full), (full, empty), (empty, empty)):
+        for mode in ("numpy", "oracle", "pallas"):
+            li, ri, total = jops.hash_join_pipeline(lcs, rcs, mode=mode)
+            assert total == 0 and len(li) == 0 and len(ri) == 0
+
+
+def test_join_pipeline_transfers_strictly_below_staged(rng):
+    """The fused pipeline's claim, measured: fewer host<->device crossings
+    than running the same tier staged (probe op + host expand + gather op),
+    on both device tiers."""
+    lcs, rcs, _ = _pipeline_fixture(rng)
+
+    def staged(probe_fn, gather_kw):
+        order, lo, counts = probe_fn()
+        li, pos = jops.expand_pairs_numpy(lo, counts)
+        jops.gather_rows(order, pos, assume_inbounds=True,
+                         bounded_by_len=True, **gather_kw)
+
+    for label, fused_kw, probe_fn, gather_kw in (
+            ("oracle", {"mode": "oracle"},
+             lambda: jops.hash_probe_oracle(lcs, rcs), {}),
+            ("pallas", {"mode": "pallas", "use_kernel": True,
+                        "interpret": True},
+             lambda: jops.hash_probe(lcs, rcs, use_kernel=True,
+                                     interpret=True),
+             {"use_kernel": True, "interpret": True})):
+        with jops.track_transfers() as fused:
+            jops.hash_join_pipeline(lcs, rcs, **fused_kw)
+        with jops.track_transfers() as stag:
+            staged(probe_fn, gather_kw)
+        assert fused.total < stag.total, (label, fused, stag)
+        assert fused.d2h <= stag.d2h, (label, fused, stag)
+    # the host tier never crosses the boundary at all
+    with jops.track_transfers() as host:
+        jops.hash_join_pipeline(lcs, rcs, mode="numpy")
+    assert host.total == 0
+
+
+def test_join_pipeline_cap_fires_before_materialization(rng):
+    lcs, rcs, (_, _, total) = _pipeline_fixture(rng)
+    for mode, kw in (("numpy", {}), ("oracle", {}),
+                     ("pallas", {"use_kernel": True, "interpret": True})):
+        li, ri, got = jops.hash_join_pipeline(lcs, rcs, mode=mode,
+                                              max_total=total, **kw)
+        assert got == total
+        with pytest.raises(jops.ExpansionCapExceeded, match=f"{total} rows"):
+            jops.hash_join_pipeline(lcs, rcs, mode=mode,
+                                    max_total=total - 1, **kw)
+
+
+def test_join_pipeline_per_stage_envelope_fallbacks(rng, monkeypatch):
+    """Past the probe/expand/gather envelopes the pallas pipeline swaps
+    single stages for their device oracles (never the whole join to host):
+    results stay bit-identical and no kernel compile for a fake TPU is
+    attempted."""
+    lcs, rcs, (ref_li, ref_ri, ref_total) = _pipeline_fixture(rng)
+    monkeypatch.setenv("REPRO_KERNEL_THRESHOLD", "10")
+    monkeypatch.setenv("REPRO_JOIN_PROBE_WORK_CAP", "100")
+    monkeypatch.setenv("REPRO_JOIN_EXPAND_WORK_CAP", "100")
+    monkeypatch.setenv("REPRO_JOIN_GATHER_RESIDENT_ROWS", "8")
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: True)
+    # interpret pinned: the un-guarded pack stage still runs its kernel,
+    # which must not try to compile for the faked TPU on this CPU host
+    li, ri, total = jops.hash_join_pipeline(lcs, rcs, mode="pallas",
+                                            interpret=True)
+    assert total == ref_total
+    np.testing.assert_array_equal(li, ref_li)
+    np.testing.assert_array_equal(ri, ref_ri)
+
+
+# --------------------------------------------------------------------------- #
+# the empirical dispatch autotuner
+# --------------------------------------------------------------------------- #
+
+def _m(work, kernel_us, fallback_us):
+    return autotune.Measurement("probe", work, kernel_us, fallback_us)
+
+
+def test_autotune_crossover_logic():
+    """Synthetic sweeps pin the envelope arithmetic: never-wins -> 0,
+    always-wins -> default, bracketed -> geometric midpoint."""
+    default = 1 << 32
+    assert autotune.crossover_cap(
+        [_m(100, 9, 1), _m(10_000, 90, 1)], default=default) == 0
+    assert autotune.crossover_cap(
+        [_m(100, 1, 9), _m(10_000, 1, 90)], default=default) == default
+    cap = autotune.crossover_cap(
+        [_m(100, 1, 2), _m(10_000, 5, 2), _m(10**6, 50, 2)],
+        default=default)
+    assert cap == int(np.sqrt(100 * 10_000))           # 1000
+    # noise below the last win doesn't truncate the envelope
+    assert autotune.crossover_cap(
+        [_m(10, 9, 1), _m(100, 1, 2), _m(10_000, 5, 2)],
+        default=default) == int(np.sqrt(100 * 10_000))
+    assert autotune.crossover_cap([], default=default) == 0
+
+
+def test_autotune_tune_join_with_synthetic_timer():
+    """tune_join sweeps kernel-vs-fallback per stage through an injectable
+    timer; a clock that always favors the fallback pins every cap to 0, one
+    that favors the kernel keeps the analytical defaults."""
+    slow_kernel = iter([5.0, 1.0] * 100)
+    prof = autotune.tune_join(quick=True,
+                              timer=lambda fn: next(slow_kernel))
+    assert all(v == 0 for v in prof.envelopes.values())
+    assert {m.stage for m in prof.measurements} == {"probe", "expand",
+                                                    "gather"}
+    fast_kernel = iter([1.0, 5.0] * 100)
+    prof = autotune.tune_join(quick=True,
+                              timer=lambda fn: next(fast_kernel))
+    assert prof.envelopes[autotune.PROBE_CAP] == 1 << 32
+    assert prof.envelopes[autotune.GATHER_CAP] == 1 << 21
+
+
+def test_autotune_profile_roundtrip_and_resolution_order(tmp_path,
+                                                         monkeypatch):
+    """A recorded profile survives JSON save/load; dispatch resolves
+    env var > installed profile > hard-coded default."""
+    from repro.kernels.join import ops as live_ops
+
+    prof = autotune.DispatchProfile(
+        envelopes={autotune.PROBE_CAP: 123, autotune.EXPAND_CAP: 456},
+        backend="tpu",
+        measurements=[_m(100, 1.0, 2.0)])
+    path = tmp_path / "profile.json"
+    prof.save(str(path))
+    back = autotune.DispatchProfile.load(str(path))
+    assert back.envelopes == prof.envelopes
+    assert back.backend == "tpu"
+    assert back.measurements[0].work == 100
+
+    try:
+        # default, then profile, then env var — later layers win
+        dispatch.clear_profile()
+        assert live_ops._probe_work_cap() == 1 << 32
+        back.install()
+        assert live_ops._probe_work_cap() == 123
+        assert live_ops._expand_work_cap() == 456
+        assert live_ops._gather_resident_rows() == 1 << 21   # not recorded
+        monkeypatch.setenv(autotune.PROBE_CAP, "77")
+        assert live_ops._probe_work_cap() == 77
+        assert live_ops._expand_work_cap() == 456            # env only wins
+        monkeypatch.delenv(autotune.PROBE_CAP)
+
+        # the REPRO_DISPATCH_PROFILE env var names a profile JSON
+        dispatch.clear_profile()
+        monkeypatch.setenv("REPRO_DISPATCH_PROFILE", str(path))
+        assert live_ops._probe_work_cap() == 123
+    finally:
+        monkeypatch.undo()
+        dispatch.clear_profile()
