@@ -13,8 +13,8 @@ import time
 import traceback
 
 BENCHES = ("clustering", "exp1", "exp2", "migration", "replication",
-           "writes", "streaming", "moe_placement", "kernels", "train",
-           "roofline")
+           "writes", "streaming", "drift", "moe_placement", "kernels",
+           "train", "roofline")
 
 
 def main() -> None:

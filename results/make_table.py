@@ -7,9 +7,12 @@
 A ``.csv`` argument is discriminated by header: a ``rate_qps`` column
 renders the streaming-admission percentile table (per ``(mode, rate_qps)``,
 the p50/p95/p99 over every per-window row ``benchmarks/bench_streaming.py``
-wrote); a ``us_per_call`` column renders the generic name/time/derived rows
-that ``bench_kernels.py --csv`` and ``bench_exp1.py`` emit — including the
-fused-vs-staged join-pipeline speedup rows.
+wrote); a ``scenario`` column renders the drift-reactivity table (per
+``(scenario, mode)`` recovery metrics recomputed from the per-window rows
+``benchmarks/bench_drift.py`` wrote); a ``us_per_call`` column renders the
+generic name/time/derived rows that ``bench_kernels.py --csv`` and
+``bench_exp1.py`` emit — including the fused-vs-staged join-pipeline
+speedup rows.
 """
 import csv
 import glob
@@ -54,6 +57,58 @@ def streaming_table(path):
             print(f"rate={rate:8g} {mode:10s} windows={w:3d} n={n:5d} "
                   f"p50={fmt(p50 / 1e3):>9s} p95={fmt(p95 / 1e3):>9s} "
                   f"p99={fmt(p99 / 1e3):>9s}")
+
+
+def drift_table(path, margin=0.2, baseline_windows=3):
+    """Reactivity rows per (scenario, mode) from bench_drift's per-window
+    CSV: onsets recovered, worst degradation depth, max time-to-recover,
+    and migration+replica bytes spent recovering. Mirrors the definitions
+    in ``repro.scenario.reactivity`` — baselines anchor to the tail of the
+    most recent earlier phase with the same ``mix_id``, else the windows
+    just before the onset."""
+    arms = {}
+    with open(path, newline="") as fh:
+        for rec in csv.DictReader(fh):
+            arms.setdefault((rec["scenario"], rec["mode"]), []).append(rec)
+    rows = []
+    for (scenario, mode), recs in arms.items():
+        recs.sort(key=lambda r: int(r["window"]))
+        onsets = [int(r["window"]) for r in recs if r["onset"] == "1"]
+        spans = list(zip([0] + onsets, onsets + [len(recs)]))
+        n_rec, depths, ttrs, spent = 0, [], [], 0
+        for start, end in spans:
+            if start not in onsets:
+                continue
+            key = recs[start]["mix_id"]
+            same = [(s, e) for s, e in spans if e <= start
+                    and recs[s]["mix_id"] == key]
+            s, e = same[-1] if same else (max(0, start - baseline_windows),
+                                          start)
+            pre = recs[max(s, e - baseline_windows):e]
+            base = sum(float(r["window_ms"]) for r in pre) / len(pre)
+            span = recs[start:end]
+            at = next((i for i, r in enumerate(span)
+                       if float(r["window_ms"]) <= (1 + margin) * base),
+                      None)
+            upto = span if at is None else span[:at + 1]
+            depths.append(max(float(r["window_ms"]) for r in upto) / base)
+            if at is not None:
+                n_rec += 1
+                ttrs.append(at)
+            spent += sum(int(r["stall_bytes"]) for r in upto)
+        rows.append((scenario, mode, len(recs), len(onsets), n_rec,
+                     max(depths), max(ttrs, default=0), spent))
+    if md:
+        print("| scenario | mode | windows | onsets | recovered | "
+              "worst depth | max ttr | bytes/recovery |")
+        print("|---|---|---|---|---|---|---|---|")
+        for s, m, w, o, r, dep, ttr, b in rows:
+            print(f"| {s} | {m} | {w} | {o} | {r} | {dep:.2f}x | {ttr} | "
+                  f"{b} |")
+    else:
+        for s, m, w, o, r, dep, ttr, b in rows:
+            print(f"{s:16s} {m:18s} windows={w:3d} onsets={o} "
+                  f"recovered={r} depth={dep:5.2f}x ttr={ttr} bytes={b}")
 
 
 def rows_table(path):
@@ -102,6 +157,8 @@ if d.endswith(".csv"):
         head = csv.DictReader(fh).fieldnames or []
     if "us_per_call" in head:
         rows_table(d)
+    elif "scenario" in head:
+        drift_table(d)
     else:
         streaming_table(d)
 else:

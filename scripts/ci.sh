@@ -4,8 +4,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# CI runs the whole suite at full property-test profiles; the default
+# developer `pytest -x -q` skips @slow tests and runs reduced profiles
+export REPRO_FULL_TESTS=1
 
-echo "== tier-1: pytest =="
+echo "== tier-1: pytest (full profiles, slow tests included) =="
 python -m pytest -x -q
 
 echo "== smoke: examples/quickstart.py (KGService + all strategies) =="
@@ -259,6 +262,54 @@ for name in ("numpy", "jax", "jax-pallas"):
 assert per_exec["numpy"] == per_exec["jax"] == per_exec["jax-pallas"], \
     "executor backends disagree on streamed results"
 EOF
+
+echo "== smoke: drift scenario replay (WatDiv flash crowd, adaptive vs frozen) =="
+python - <<'EOF'
+from repro import scenario as drift
+from repro.api import AWAPartitioner, KGService
+from repro.graph import watdiv
+
+ds = watdiv.load(1, seed=0)
+scn = drift.flash_crowd(ds, warm=2, spike=2, cool=1,
+                        queries_per_window=6, seed=3)
+
+def build(executor):
+    svc = KGService.from_dataset(ds, n_shards=4,
+                                 partitioner=AWAPartitioner(),
+                                 executor=executor,
+                                 migration_budget=1 << 20,
+                                 replica_budget=1 << 20)
+    svc.bootstrap(scn.bootstrap_workload(ds))
+    return svc
+
+reports = {}
+for mode, adapt in (("adaptive", True), ("frozen", False)):
+    per_exec = {}
+    for name in ("numpy", "jax", "jax-pallas"):
+        rep = drift.run_scenario(build(name), scn, ds, adapt=adapt,
+                                 mode=f"awapart/{mode}", warmup_phases=1)
+        # modeled costs derive from ExecStats, pinned identical across
+        # executors — the whole telemetry series must match exactly
+        per_exec[name] = [(w.window_ms, w.stall_bytes, w.epoch, w.adapted)
+                          for w in rep.windows]
+    assert per_exec["numpy"] == per_exec["jax"] == per_exec["jax-pallas"], \
+        f"executors disagree on the {mode} replay"
+    reports[mode] = rep
+
+spike = next(i for i, w in enumerate(reports["adaptive"].windows) if w.onset)
+assert any(w.adapted for w in reports["adaptive"].windows[spike:]), \
+    "adaptive arm never reacted to the flash crowd"
+assert not any(w.adapted for w in reports["frozen"].windows[2:]), \
+    "frozen arm adapted after its warm-up phase"
+a, f = reports["adaptive"].summary(), reports["frozen"].summary()
+assert a["recovered"] >= f["recovered"]
+print(f"[ci] drift smoke: {int(a['windows'])} windows, "
+      f"adaptive recovered {int(a['recovered'])}/{int(a['onsets'])} "
+      f"(frozen {int(f['recovered'])}), executors identical")
+EOF
+
+echo "== smoke: benchmarks/bench_drift.py --dry-run =="
+python benchmarks/bench_drift.py --dry-run
 
 echo "== smoke: benchmarks/bench_streaming.py --dry-run =="
 python benchmarks/bench_streaming.py --dry-run

@@ -7,8 +7,8 @@ randoms) instead of being skipped, so the tier-1 suite keeps its coverage on
 machines without dev dependencies.
 
 Only the surface this repo uses is implemented: ``given``, ``settings``
-(``max_examples`` / ``deadline``), ``assume``, ``note`` and
-``strategies.integers``.
+(``max_examples`` / ``deadline``), ``assume``, ``note``,
+``strategies.integers`` and ``strategies.sampled_from``.
 """
 from __future__ import annotations
 
@@ -40,8 +40,17 @@ def _integers(min_value: int, max_value: int) -> _Strategy:
         sample=lambda rng: int(rng.integers(min_value, max_value + 1)))
 
 
+def _sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    assert elems, "sampled_from() needs a non-empty collection"
+    return _Strategy(
+        boundaries=list(dict.fromkeys([elems[0], elems[-1]])),
+        sample=lambda rng: elems[int(rng.integers(len(elems)))])
+
+
 class _StrategiesNamespace:
     integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
 
 
 strategies = _StrategiesNamespace()

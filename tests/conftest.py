@@ -14,6 +14,27 @@ import pytest
 from repro.core.features import FeatureSpace
 from repro.graph import lubm
 
+# scripts/ci.sh exports REPRO_FULL_TESTS=1: @slow tests run and property
+# tests use their full example budgets. A default `pytest -x -q` skips
+# @slow and runs the reduced profiles, keeping tier-1 well under 10 min.
+FULL_PROFILES = os.environ.get("REPRO_FULL_TESTS") == "1"
+
+
+def max_examples(full, fast):
+    """Hypothesis example budget for a property test: ``full`` under
+    scripts/ci.sh, the reduced ``fast`` count on a default run."""
+    return full if FULL_PROFILES else fast
+
+
+def pytest_collection_modifyitems(config, items):
+    if FULL_PROFILES:
+        return
+    skip = pytest.mark.skip(
+        reason="slow: run under REPRO_FULL_TESTS=1 (scripts/ci.sh)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
 
 def canon_bindings(bindings):
     """Canonical form of an executor's bindings ({var: column}) for

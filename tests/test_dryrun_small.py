@@ -6,6 +6,8 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 REPO = Path(__file__).resolve().parent.parent
 
 _SCRIPT = """
@@ -59,6 +61,7 @@ print("DRYRUN-SMALL-OK")
 """
 
 
+@pytest.mark.slow
 def test_small_mesh_dryrun_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT],

@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from conftest import canon_bindings
+from conftest import canon_bindings, max_examples
 from repro.api import KGService
 from repro.core.features import FeatureSpace
 from repro.core.migration import TRIPLE_BYTES
@@ -64,7 +64,7 @@ def _random_query(rng, store, name="R"):
     return Query(name=name, patterns=tuple(pats))
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=max_examples(15, 5), deadline=None)
 @given(st.integers(0, 2**20))
 def test_numpy_jax_equivalent_on_random_bgps(seed):
     """Property: for random stores, BGPs and layouts, NumpyExecutor and

@@ -128,6 +128,7 @@ print("MOE-SHARDED-OK")
 """
 
 
+@pytest.mark.slow
 def test_moe_sharded_dispatch_parity_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _MOE_SUBPROCESS],

