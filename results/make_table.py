@@ -12,7 +12,10 @@ wrote); a ``scenario`` column renders the drift-reactivity table (per
 ``benchmarks/bench_drift.py`` wrote); a ``us_per_call`` column renders the
 generic name/time/derived rows that ``bench_kernels.py --csv`` and
 ``bench_exp1.py`` emit — including the fused-vs-staged join-pipeline
-speedup rows.
+speedup rows; a ``metric`` column renders the observability snapshot
+(``repro.obs.MetricsRegistry.to_csv`` / ``launch.serve --metrics-csv``)
+grouped by kind — counters and gauges as single values, histograms with
+their mean/p50/p95/p99/max columns.
 """
 import csv
 import glob
@@ -129,6 +132,38 @@ def rows_table(path):
                   f"  {r['derived']}")
 
 
+def metrics_table(path):
+    """Observability-snapshot rows (``MetricsRegistry.to_csv``): counters
+    and gauges print their single value, histograms their count plus the
+    mean/p50/p95/p99/max summary — grouped by kind, names sorted."""
+    with open(path, newline="") as fh:
+        recs = list(csv.DictReader(fh))
+    order = {"counter": 0, "gauge": 1, "histogram": 2}
+    recs.sort(key=lambda r: (order.get(r["kind"], 9), r["metric"]))
+    if md:
+        print("| metric | kind | value/n | mean | p50 | p95 | p99 | max |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            tail = (" | ".join(f"{float(r[c]):g}" for c in
+                               ("mean", "p50", "p95", "p99", "max"))
+                    if r["kind"] == "histogram"
+                    else " | ".join([""] * 5))
+            print(f"| {r['metric']} | {r['kind']} | {float(r['value']):g} | "
+                  f"{tail} |")
+    else:
+        for r in recs:
+            if r["kind"] == "histogram":
+                print(f"{r['metric']:44s} hist  n={float(r['value']):g} "
+                      f"mean={float(r['mean']):.6g} "
+                      f"p50={float(r['p50']):.6g} "
+                      f"p95={float(r['p95']):.6g} "
+                      f"p99={float(r['p99']):.6g} "
+                      f"max={float(r['max']):.6g}")
+            else:
+                print(f"{r['metric']:44s} {r['kind']:5s} "
+                      f"{float(r['value']):g}")
+
+
 def roofline_table(dirname):
     rows = []
     for f in sorted(glob.glob(f"{dirname}/*.json")):
@@ -157,6 +192,8 @@ if d.endswith(".csv"):
         head = csv.DictReader(fh).fieldnames or []
     if "us_per_call" in head:
         rows_table(d)
+    elif "metric" in head:
+        metrics_table(d)
     elif "scenario" in head:
         drift_table(d)
     else:

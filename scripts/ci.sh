@@ -326,6 +326,34 @@ python benchmarks/bench_migration.py --dry-run
 echo "== smoke: benchmarks/bench_kernels.py --dry-run (join kernel) =="
 python benchmarks/bench_kernels.py --dry-run
 
+echo "== smoke: traced serve run (--trace/--metrics-csv, schema-validated) =="
+python -m repro.launch.serve --universities 1 --shards 4 --experiment 1 \
+    --migration-budget 120000 --trace /tmp/ci_trace.json \
+    --metrics-csv /tmp/ci_metrics.csv
+python - <<'EOF'
+import json
+
+raw = json.load(open("/tmp/ci_trace.json"))
+events = raw["traceEvents"]
+assert events and raw.get("displayTimeUnit") == "ms"
+for ev in events:                 # Chrome trace-event schema (Perfetto)
+    assert ev["ph"] in ("X", "M"), ev
+    assert {"name", "ph", "pid", "tid"} <= set(ev), ev
+    if ev["ph"] == "X":
+        assert ev["dur"] >= 0 and ev["ts"] >= 0, ev
+names = [ev["name"] for ev in events if ev["ph"] == "X"]
+for needed in ("adapt.round", "migration.chunk", "window", "query",
+               "plan", "scan", "join", "federate", "ship"):
+    assert needed in names, f"missing {needed} spans in the trace"
+n_rounds = names.count("adapt.round")
+assert n_rounds >= 1, "no adaptation-round span recorded"
+print(f"[ci] trace schema ok: {len(events)} events, {n_rounds} adaptation "
+      f"round(s), {names.count('migration.chunk')} migration chunks, "
+      f"{names.count('query')} query spans")
+EOF
+python results/make_table.py /tmp/ci_metrics.csv
+python results/make_table.py /tmp/ci_metrics.csv --md > /dev/null
+
 echo "== smoke: kernels.autotune --quick (empirical dispatch profile) =="
 python -m repro.kernels.autotune --quick --out /tmp/ci_dispatch_profile.json
 python - <<'EOF'

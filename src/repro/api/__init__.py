@@ -25,7 +25,13 @@ Everything callers need to serve a partitioned knowledge graph:
   (reference) and :class:`JaxExecutor` (batched; ``pallas=True`` — the
   ``executor="jax-pallas"`` knob — probes joins through the
   ``repro.kernels.join`` Pallas kernel family), re-exported from
-  ``repro.query.exec``.
+  ``repro.query.exec``;
+* observability: :class:`Tracer` / :class:`MetricsRegistry`
+  (``repro.obs``) — ``KGService(trace=True)`` records per-query
+  plan→scan→join→federate→ship spans plus window / migration-chunk /
+  write-batch / adaptation-round spans on the modeled clock
+  (``svc.tracer().export("out.json")`` is Perfetto-loadable), and every
+  service folds its metrics snapshot into ``stats()["metrics"]``.
 
 See ``docs/api.md`` for the quickstart.
 """
@@ -34,6 +40,7 @@ from repro.api.partitioners import (AWAPartitioner, HashPartitioner,
                                     Partitioner, WawPartitioner)
 from repro.api.service import KGService
 from repro.migrate import MigrationSession
+from repro.obs import MetricsRegistry, Tracer
 from repro.query.exec import Executor, JaxExecutor, NumpyExecutor
 from repro.replicate import ReplicaMap
 from repro.stream import LatencyRecorder, StreamService
@@ -46,12 +53,14 @@ __all__ = [
     "JaxExecutor",
     "KGService",
     "LatencyRecorder",
+    "MetricsRegistry",
     "MigrationSession",
     "NumpyExecutor",
     "PartitionedKG",
     "Partitioner",
     "ReplicaMap",
     "StreamService",
+    "Tracer",
     "WawPartitioner",
     "WriteBatch",
     "WriteLog",

@@ -49,6 +49,7 @@ from repro.core import migration
 from repro.core.features import FeatureSpace
 from repro.core.partition import PartitionState
 from repro.graph.triples import TripleStore
+from repro.obs.metrics import NULL_METRICS
 from repro.query import exec as qexec
 from repro.query import plan as qplan
 from repro.query.pattern import Query
@@ -61,10 +62,14 @@ class PartitionedKG:
     def __init__(self, store: TripleStore, space: FeatureSpace,
                  state: PartitionState, owners: np.ndarray | None = None,
                  max_join_rows: int = qexec.DEFAULT_MAX_JOIN_ROWS,
-                 replicas: ReplicaMap | None = None):
+                 replicas: ReplicaMap | None = None,
+                 metrics=None):
         self.store = store
         self.space = space
         self.state = state
+        # repro.obs registry (the owning KGService's); inert by default so
+        # facades built directly — tests, rebuild twins — need no checks
+        self.metrics = metrics if metrics is not None else NULL_METRICS
         # profiling honors the serving executor's cartesian-join cap
         self.max_join_rows = max_join_rows
         self.owners = space.triple_owners() if owners is None else owners
@@ -139,6 +144,7 @@ class PartitionedKG:
                     self.store.triples[self.shard_rows(s)],
                     self.store.dictionary)
                 self.view_rebuilds += 1
+                self.metrics.counter("cache.view_rebuilds").inc()
         return list(self._views)
 
     def shard_rows(self, s: int) -> np.ndarray:
@@ -170,6 +176,13 @@ class PartitionedKG:
             cached = np.where(on[self.owners], np.int32(ppn),
                               self._triple_shard)
             self._read_cache[ppn] = cached
+            # replica-served volume: triples a query homed at this PPN
+            # reads from local copies instead of shipping (vs. the
+            # federation.bytes_shipped counter's actual wire traffic)
+            local = int(np.count_nonzero((cached == ppn)
+                                         & (self._triple_shard != ppn)))
+            self.metrics.gauge(
+                f"replicate.local_read_rows.ppn{ppn}").set(local)
         return cached
 
     def _refresh_replica_rows(self, s: int,
@@ -248,11 +261,13 @@ class PartitionedKG:
         # replica ops first (drops, then — after the moves below — adds),
         # tracking which shards' copy sets actually change
         rep_touched: set = set()
+        dropped = 0
         for f, s in replica_drops:
             if int(new_state.feature_to_shard[f]) != s \
                     and self.replicas.has(f, s):
                 self.replicas.remove(f, s)
                 rep_touched.add(s)
+                dropped += 1
         # an add is effective unless the target IS the feature's new primary
         # or will still hold a copy after the moves below run: a retained
         # copy at a moving feature's OLD primary is effective (the move
@@ -295,6 +310,11 @@ class PartitionedKG:
         self.state = new_state
         self.epoch += 1
         self._invalidate_caches()          # PPN/federation annotations changed
+        m = self.metrics
+        m.counter("migrate.features_moved").inc(len(changed))
+        m.counter("replicate.promotions").inc(len(effective_adds))
+        m.counter("replicate.demotions").inc(dropped)
+        m.gauge("layout.epoch").set(self.epoch)
 
     def apply_chunk(self, chunk: migration.MigrationChunk) -> None:
         """Apply one ``MigrationChunk`` of an in-flight migration as an
@@ -340,12 +360,14 @@ class PartitionedKG:
             entry = (pats, qplan.plan(q, self), self.epoch)
             self._plans[q.name] = entry
             self.plan_builds += 1
+            self.metrics.counter("cache.plan_builds").inc()
         else:
             assert entry[2] == self.epoch, \
                 f"stale plan served for {q.name}: cached at epoch " \
                 f"{entry[2]}, layout is at {self.epoch} — a mutating path " \
                 "bumped the epoch without invalidating"
             self.plan_hits += 1
+            self.metrics.counter("cache.plan_hits").inc()
         return entry[1]
 
     def profile(self, q: Query) -> qplan.QueryProfile:
@@ -384,6 +406,7 @@ class PartitionedKG:
                 f"{entry[3]}, layout is at {self.epoch} — a mutating path " \
                 "bumped the epoch without invalidating"
             self.result_hits += 1
+            self.metrics.counter("cache.result_hits").inc()
             return ({v: c.copy() for v, c in entry[1].items()},
                     dataclasses.replace(entry[2]))
         return None

@@ -34,9 +34,10 @@ import numpy as np
 from repro import write as kgwrite
 from repro.core.adaptive import AdaptConfig, AdaptReport, AWAPartController
 from repro.core.features import FeatureSpace
-from repro.core.migration import MigrationChunk
+from repro.core.migration import TRIPLE_BYTES, MigrationChunk
 from repro.graph.triples import TripleStore
 from repro.migrate import MigrationSession
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer, set_ambient
 from repro.query import exec as qexec
 from repro.query.pattern import Query
 
@@ -68,7 +69,8 @@ class KGService:
                  executor: "str | qexec.Executor | None" = None,
                  net: qexec.NetworkModel | None = None,
                  migration_budget: int | None = None,
-                 replica_budget: int | None = None):
+                 replica_budget: int | None = None,
+                 trace: "bool | Tracer" = False):
         self.store = store
         self.n_shards = n_shards
         self.partitioner = partitioner or AWAPartitioner(config)
@@ -94,6 +96,18 @@ class KGService:
         self._times: Dict[str, List[float]] = {}   # TM for non-adaptive runs
         self.write_log = kgwrite.WriteLog()        # applied-mutation history
         self._stream_recorder = None   # LatencyRecorder of the live stream
+        # observability (repro.obs): one registry per service, always on
+        # (counters are cheap); span tracing only when asked for. The
+        # registry doubles as the ambient sink for kernel-dispatch tier
+        # counters, which have no service handle.
+        self.metrics = MetricsRegistry()
+        set_ambient(self.metrics)
+        if trace is True:
+            self._tracer = Tracer()
+        elif trace:
+            self._tracer = trace            # caller-owned Tracer instance
+        else:
+            self._tracer = NULL_TRACER
 
     @classmethod
     def from_dataset(cls, ds, n_shards: int,
@@ -118,7 +132,9 @@ class KGService:
         self.kg = PartitionedKG(
             self.store, self.space, state,
             max_join_rows=getattr(self.executor, "max_join_rows",
-                                  qexec.DEFAULT_MAX_JOIN_ROWS))
+                                  qexec.DEFAULT_MAX_JOIN_ROWS),
+            metrics=self.metrics)
+        self.metrics.gauge("join.expand_cap").set(self.kg.max_join_rows)
         return self.kg
 
     # ------------------------------------------------------------------ #
@@ -131,11 +147,15 @@ class KGService:
         result cache without re-execution."""
         assert self.kg is not None, "bootstrap() first"
         hit = self.kg.cached_result(q)
+        cached = hit is not None
+        built0 = self.kg.plan_builds
         if hit is None:
             hit = self.executor.run(self.kg.plan(q), self.kg)
             self.kg.store_result(q, *hit)
         bindings, stats = hit
         self.observe(q, stats.modeled_time(self.net))
+        self._note_query(q, stats, cached,
+                         plan_built=self.kg.plan_builds > built0)
         return bindings, stats
 
     def query_batch(self, queries: Sequence[Query],
@@ -165,14 +185,87 @@ class KGService:
         assert self.kg is not None, "bootstrap() first"
         results = [self.kg.cached_result(q) for q in queries]
         miss = [i for i, r in enumerate(results) if r is None]
+        built = set()
         if miss:
-            plans = [self.kg.plan(queries[i]) for i in miss]
+            plans = []
+            for i in miss:
+                builds0 = self.kg.plan_builds
+                plans.append(self.kg.plan(queries[i]))
+                if self.kg.plan_builds > builds0:
+                    built.add(i)
             for i, res in zip(miss, self.executor.run_batch(plans, self.kg)):
                 results[i] = res
                 self.kg.store_result(queries[i], *res)
         for q, (_, stats) in zip(queries, results):
             self.observe(q, stats.modeled_time(self.net))
+        missed = set(miss)
+        tr = self._tracer
+        if tr.enabled:
+            with tr.span("window", cat="serve", n=len(queries),
+                         misses=len(miss), epoch=self.kg.epoch):
+                for i, (q, (_, stats)) in enumerate(zip(queries, results)):
+                    self._note_query(q, stats, cached=i not in missed,
+                                     plan_built=i in built)
+        else:
+            for i, (q, (_, stats)) in enumerate(zip(queries, results)):
+                self._note_query(q, stats, cached=i not in missed,
+                                 plan_built=i in built)
         return results, miss
+
+    def _note_query(self, q: Query, stats: qexec.ExecStats, cached: bool,
+                    plan_built: bool) -> None:
+        """Per-query observability: registry counters always; when tracing,
+        one ``query`` span decomposed into plan→scan→join→federate→ship
+        children whose durations are exactly the ``NetworkModel`` terms of
+        ``stats.modeled_time`` — so the spans are emitted from plan+stats
+        at the service layer and their *structure* is identical across
+        executor backends (ExecStats.COMPARABLE is pinned by tests)."""
+        net = self.net or qexec.NetworkModel()
+        m = self.metrics
+        m.counter("queries.served").inc()
+        if cached:
+            m.counter("queries.result_cache_hits").inc()
+        else:
+            m.counter("federation.messages").inc(stats.messages)
+            m.counter("federation.rows_shipped").inc(stats.rows_shipped)
+            m.counter("federation.bytes_shipped").inc(stats.bytes_shipped)
+            m.counter("join.cross_shard").inc(stats.distributed_joins)
+            m.counter("join.rows").inc(stats.join_rows)
+            m.counter("join.expanded_rows").inc(stats.expanded_rows)
+            peak = m.gauge("join.expanded_rows_peak").track_max(
+                stats.expanded_rows)
+            m.gauge("join.expand_cap_headroom").set(
+                self.kg.max_join_rows - peak)
+            m.histogram("query.modeled_s").observe(stats.modeled_time(net))
+        tr = self._tracer
+        if not tr.enabled:
+            return
+        with tr.span("query", cat="serve", query=q.name, cached=cached,
+                     epoch=self.kg.epoch, rows=stats.rows):
+            with tr.span("plan", cat="serve",
+                         dur=net.plan_s if plan_built else 0.0,
+                         built=plan_built):
+                pass
+            with tr.span("scan", cat="serve",
+                         dur=stats.scan_rows_critical / net.scan_rows_per_s,
+                         rows=stats.scan_rows_critical):
+                pass
+            with tr.span("join", cat="serve",
+                         dur=stats.join_rows / net.join_rows_per_s,
+                         rows=stats.join_rows,
+                         cross_shard=stats.distributed_joins,
+                         expanded_rows=stats.expanded_rows):
+                pass
+            with tr.span("federate", cat="serve",
+                         dur=stats.messages * net.latency_s,
+                         messages=stats.messages):
+                pass
+            with tr.span("ship", cat="serve",
+                         dur=stats.rows_shipped * net.row_bytes
+                             / net.bandwidth_Bps,
+                         rows=stats.rows_shipped,
+                         bytes=stats.bytes_shipped):
+                pass
 
     # ------------------------------------------------------------------ #
     # live writes (repro.write)
@@ -213,6 +306,20 @@ class KGService:
         ctrl = self.controller
         if ctrl is not None and report.effective:
             ctrl.note_writes(report)
+        tr = self._tracer
+        if tr.enabled:
+            net = self.net or qexec.NetworkModel()
+            traffic = (report.n_inserted + report.n_deleted) * TRIPLE_BYTES \
+                + report.fanout_bytes
+            with tr.span("write.batch", cat="write",
+                         dur=traffic / net.bandwidth_Bps,
+                         inserted=report.n_inserted,
+                         deleted=report.n_deleted,
+                         redundant=report.n_redundant,
+                         touched_shards=len(report.touched_shards),
+                         fanout_bytes=report.fanout_bytes,
+                         epoch=report.epoch):
+                pass
         return report
 
     # ------------------------------------------------------------------ #
@@ -231,12 +338,27 @@ class KGService:
         from repro.stream import StreamService
         return StreamService(self, **kwargs)
 
+    def tracer(self) -> Tracer:
+        """The service's span tracer (``repro.obs.Tracer``) — inspect
+        ``tracer().events`` or ``tracer().export(path)`` after a run."""
+        if not self._tracer.enabled:
+            raise RuntimeError(
+                "tracing is disabled for this service: construct it with "
+                "KGService(..., trace=True) (or pass a repro.obs.Tracer "
+                "instance) to record spans")
+        return self._tracer
+
     def stats(self) -> Dict[str, object]:
         """One dict of everything observable about the serving session:
         the facade's layout/cache telemetry, write-log and migration-drain
-        progress, and — when a stream is (or was) attached — the latency
-        aggregates (overall / per-window / per-shard p50/p95/p99)."""
-        assert self.kg is not None, "bootstrap() first"
+        progress, the metrics-registry snapshot, and the latency aggregates
+        (overall / per-window / per-shard p50/p95/p99 — a well-formed
+        all-zero block when no stream has recorded anything yet)."""
+        if self.kg is None:
+            raise RuntimeError(
+                "KGService.stats() before bootstrap(): call "
+                "svc.bootstrap(workload) to partition the graph and "
+                "materialize the shard views first")
         out = self.kg.telemetry()
         out.update(
             executor=self.executor.name,
@@ -248,10 +370,15 @@ class KGService:
             migration_progress=(self.session.progress()
                                 if self.session is not None else 1.0),
         )
+        from repro.stream.telemetry import LatencyRecorder
         rec = self._stream_recorder
         if rec is not None and len(rec):
             out["latency"] = rec.summary()
             out["latency_per_shard"] = rec.per_shard()
+        else:
+            out["latency"] = LatencyRecorder.empty_summary()
+            out["latency_per_shard"] = {}
+        out["metrics"] = self.metrics.snapshot()
         return out
 
     def run_workload(self, queries: Sequence[Query],
@@ -293,7 +420,8 @@ class KGService:
         ctrl = self.controller
         return ctrl is not None and ctrl.should_adapt()
 
-    def adapt(self, new_queries: Sequence[Query] = ()) -> AdaptReport:
+    def adapt(self, new_queries: Sequence[Query] = (), *,
+              _trigger: str = "explicit") -> AdaptReport:
         """Run one adaptation round now (strategy must be adaptive). On
         acceptance the TM window restarts with the measured new baseline.
 
@@ -306,16 +434,46 @@ class KGService:
         if not hasattr(self.partitioner, "adapt"):
             raise TypeError(f"partitioner '{self.partitioner.name}' is not "
                             "adaptive; use AWAPartitioner")
-        self.drain()                           # finish any in-flight drain
-        session, report = self.partitioner.adapt(
-            self.kg, list(new_queries), net=self.net,
-            bytes_budget=self.migration_budget)
-        ctrl = self.controller
-        if report.accepted and ctrl is not None:
-            ctrl.clear_window()                # fresh TM window post-migration
-            ctrl.reset_baseline(report.t_new)
-        if self.migration_budget is None:
-            session.drain()                    # atomic: commit-now behaviour
+        m = self.metrics
+        m.counter("adapt.rounds").inc()
+        # adapt is a cold path: span bookkeeping runs unconditionally (the
+        # null tracer's span is a shared no-op), so the atomic drain's chunk
+        # spans nest inside the round span without duplicated control flow
+        with self._tracer.span("adapt.round", cat="adapt",
+                               trigger=_trigger) as sp:
+            self.drain()                       # finish any in-flight drain
+            session, report = self.partitioner.adapt(
+                self.kg, list(new_queries), net=self.net,
+                bytes_budget=self.migration_budget)
+            ctrl = self.controller
+            if report.accepted and ctrl is not None:
+                ctrl.clear_window()            # fresh TM window post-migration
+                ctrl.reset_baseline(report.t_new)
+            sp.annotate(accepted=report.accepted, reason=report.reason,
+                        t_base=report.t_base, t_new=report.t_new,
+                        migration_s=report.migration_s,
+                        amortize_window=report.amortize_window,
+                        fanout_bytes=report.fanout_bytes,
+                        moves=report.plan.n_moves,
+                        chosen_cut=report.chosen_cut,
+                        n_clusters=report.n_clusters)
+            m.counter("adapt.accepted" if report.accepted
+                      else "adapt.rejected").inc()
+            if report.accepted:
+                m.gauge("replicate.copy_bytes_held").set(report.replica_bytes)
+            if report.accepted and report.plan.n_replica_ops:
+                m.counter("replicate.planned_adds").inc(
+                    len(report.plan.replica_adds))
+                m.counter("replicate.planned_drops").inc(
+                    len(report.plan.replica_drops))
+                with self._tracer.span(
+                        "replica.promotion", cat="replicate",
+                        adds=len(report.plan.replica_adds),
+                        drops=len(report.plan.replica_drops),
+                        replica_bytes=report.replica_bytes):
+                    pass
+            if self.migration_budget is None:
+                session.drain()                # atomic: commit-now behaviour
         self.session = None if session.done else session
         return report
 
@@ -324,7 +482,18 @@ class KGService:
         Returns the applied ``MigrationChunk`` or ``None`` when idle."""
         if self.session is None:
             return None
-        chunk = self.session.step()
+        sess = self.session
+        chunk = sess.step()
+        if chunk is not None and self._tracer.enabled:
+            net = self.net or qexec.NetworkModel()
+            with self._tracer.span(
+                    "migration.chunk", cat="migrate",
+                    dur=chunk.bytes / net.bandwidth_Bps,
+                    moves=len(chunk.moves), bytes=chunk.bytes,
+                    replica_adds=len(chunk.replica_adds),
+                    replica_drops=len(chunk.replica_drops),
+                    progress=sess.progress(), epoch=self.kg.epoch):
+                pass
         if self.session.done:
             self.session = None
             # the TM observed hybrid-layout times while draining; restart the
@@ -350,7 +519,14 @@ class KGService:
         Returns None when no round was run."""
         if not self.should_adapt():
             return None
-        return self.adapt(new_queries)
+        ctrl = self.controller
+        if ctrl is not None and ctrl.write_drift():
+            trigger = "write_drift"
+        elif ctrl is not None and ctrl._baseline_avg is None:
+            trigger = "no_baseline"
+        else:
+            trigger = "degradation"
+        return self.adapt(new_queries, _trigger=trigger)
 
     def reset_baseline(self, value: Optional[float] = None) -> None:
         """Public baseline control: clear (None) to force the next

@@ -94,6 +94,11 @@ class AdaptReport:
     # expected replica write-fanout traffic per TM window (bytes) under the
     # layout the round returned — observed write heat x extra copies
     fanout_bytes: int = 0
+    # why the guard accepted/rejected: "amortized" (savings paid for the
+    # migration), "improved" (t_new < t_base, no traffic to price),
+    # "unamortized" (gain too small for the journey), "no_gain",
+    # "dj_improved"/"dj_no_gain" (measureless distributed-join guard)
+    reason: str = ""
     # per-feature workload heat of this round (repr-suppressed array) — the
     # chunk priority, computed once here and reused by the session builder
     heat: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
@@ -477,10 +482,14 @@ class AWAPartController:
                 # window == 0 means nothing to amortize over: savings can
                 # never pay for a positive migration cost, so reject
                 accepted = benefit > 0 and benefit >= migration_s
+                reason = ("amortized" if accepted
+                          else "no_gain" if benefit <= 0 else "unamortized")
             else:
                 accepted = t_new < t_base                    # lines 25-27
+                reason = "improved" if accepted else "no_gain"
         else:
             accepted = dj_after < dj_before
+            reason = "dj_improved" if accepted else "dj_no_gain"
         if accepted:
             self.state = new
         else:
@@ -506,4 +515,5 @@ class AWAPartController:
             heat=heat + wh,
             replica_bytes=(rmap_new.replica_bytes(new.feature_sizes)
                            if rmap_new is not None else 0),
-            fanout_bytes=fan_new if accepted else fan_base)
+            fanout_bytes=fan_new if accepted else fan_base,
+            reason=reason)

@@ -123,3 +123,20 @@ def resolve(use_kernel: bool | None, interpret: bool | None, size: int, *,
     if interpret is None:
         interpret = not on_tpu()
     return use_kernel, interpret
+
+
+def note_tier(op: str, tier: str, reason: str = "") -> None:
+    """Record one dispatch decision in the ambient ``repro.obs`` metrics
+    registry (the owning ``KGService``'s): counters
+    ``kernels.dispatch.<op>.<tier>`` and, when given, a companion
+    ``...<tier>.<reason>`` — so tier picks (pallas/oracle/host) and their
+    fallback reasons (size floor, work caps, int32 envelopes, VMEM
+    residency) are attributable per op. No-op when no registry is
+    installed; called once per op dispatch, never per row."""
+    from repro.obs import metrics as obs_metrics
+    m = obs_metrics.ambient()
+    if m is None:
+        return
+    m.counter(f"kernels.dispatch.{op}.{tier}").inc()
+    if reason:
+        m.counter(f"kernels.dispatch.{op}.{tier}.{reason}").inc()

@@ -21,8 +21,13 @@ def jaccard_distance(bitmaps: jnp.ndarray | np.ndarray,
                      interpret: bool | None = None) -> jnp.ndarray:
     """Symmetric (Q, Q) Jaccard distance matrix from packed uint32 bitmaps."""
     a = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
                                              a.shape[0], hot_path=False)
     if not use_kernel:
+        dispatch.note_tier("jaccard.distance", "oracle",
+                           "below_floor" if auto else "forced_off")
         return ref.jaccard_distance(a, a)
+    dispatch.note_tier("jaccard.distance", "pallas",
+                       "auto" if auto else "forced")
     return kernel.jaccard_distance_pallas(a, a, interpret=interpret)

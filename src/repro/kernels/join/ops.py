@@ -210,14 +210,19 @@ def pack_keys(cols: np.ndarray, *, use_kernel: bool | None = None,
               interpret: bool | None = None) -> np.ndarray:
     """(N, K<=2) key columns (values < 2^31) -> (N,) packed int64 keys."""
     cols = np.asarray(cols)
+    auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
                                              cols.shape[0], hot_path=True)
     if not use_kernel:
+        dispatch.note_tier("join.pack_keys", "oracle",
+                           "auto" if auto else "forced_off")
         from jax.experimental import enable_x64
         with enable_x64():
             pack, _ = _oracle_fns()
             _note(h2d=1, d2h=1)
             return np.asarray(pack(cols.astype(np.int64)))
+    dispatch.note_tier("join.pack_keys", "pallas",
+                       "auto" if auto else "forced")
     hi, lo = kernel.pack_keys_pallas(cols.astype(np.int32),
                                      interpret=interpret)
     _note(h2d=1, d2h=2)
@@ -236,16 +241,22 @@ def probe_sorted(build_sorted: np.ndarray, probe: np.ndarray, *,
     auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret, size,
                                              hot_path=True)
-    if (use_kernel and auto
-            and build_sorted.shape[0] * probe.shape[0] > _probe_work_cap()):
+    capped = (use_kernel and auto
+              and build_sorted.shape[0] * probe.shape[0] > _probe_work_cap())
+    if capped:
         use_kernel = False             # quadratic compare budget exceeded
     if not use_kernel:
+        dispatch.note_tier("join.probe_sorted", "oracle",
+                           "work_cap" if capped
+                           else "auto" if auto else "forced_off")
         from jax.experimental import enable_x64
         with enable_x64():
             _, search = _oracle_fns()
             _note(h2d=2, d2h=2)
             lo, hi = search(build_sorted, probe)
             return np.asarray(lo), np.asarray(hi)
+    dispatch.note_tier("join.probe_sorted", "pallas",
+                       "auto" if auto else "forced")
     bh, bl = _split_words(build_sorted)
     ph, pl_ = _split_words(probe)
     lo, hi = kernel.probe_sorted_pallas(bh, bl, ph, pl_, interpret=interpret)
@@ -276,8 +287,10 @@ def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
     auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
                                              idx.shape[0], hot_path=True)
+    fallback_reason = "auto" if auto else "forced_off"
     if use_kernel and auto and values.shape[0] > _gather_resident_rows():
         use_kernel = False             # table would not fit one VMEM panel
+        fallback_reason = "vmem_residency"
     if use_kernel and values.size:
         # the kernel carries values as int32 words; out-of-envelope tables
         # would silently truncate, so auto falls back and forced raises.
@@ -290,7 +303,9 @@ def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
             if not auto:
                 raise ValueError("gather kernel requires int32-range values")
             use_kernel = False
+            fallback_reason = "int32_envelope"
     if not use_kernel:
+        dispatch.note_tier("join.gather_rows", "host", fallback_reason)
         if assume_inbounds:
             return values[idx]
         valid = (idx >= 0) & (idx < len(values))
@@ -299,6 +314,8 @@ def gather_rows(values: np.ndarray, idx: np.ndarray, *, fill: int = 0,
         if len(values):
             out[valid] = values[np.clip(idx, 0, len(values) - 1)][valid]
         return out
+    dispatch.note_tier("join.gather_rows", "pallas",
+                       "auto" if auto else "forced")
     got = kernel.gather_rows_pallas(values.astype(np.int32),
                                     idx.astype(np.int32), fill=fill,
                                     interpret=interpret)
@@ -369,15 +386,22 @@ def hash_probe(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray], *,
     auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
                                              max(nl, nr), hot_path=True)
-    if use_kernel and auto and nl * nr > _probe_work_cap():
+    capped = use_kernel and auto and nl * nr > _probe_work_cap()
+    if capped:
         use_kernel = False             # quadratic compare budget exceeded
     if not use_kernel:
         # three tiers: auto on CPU stays on the host (no device round trip);
         # the jnp oracle runs when explicitly forced (use_kernel=False) or
         # when a TPU is present but the problem is under the size floor
-        if auto and not dispatch.on_tpu():
+        if auto and not capped and not dispatch.on_tpu():
+            dispatch.note_tier("join.hash_probe", "host", "cpu_auto")
             return hash_probe_numpy(lcs, rcs)
+        dispatch.note_tier("join.hash_probe", "oracle",
+                           "work_cap" if capped
+                           else "below_floor" if auto else "forced_off")
         return hash_probe_oracle(lcs, rcs)
+    dispatch.note_tier("join.hash_probe", "pallas",
+                       "auto" if auto else "forced")
     lh, ll = kernel.pack_keys_pallas(
         np.stack(lcs, axis=1).astype(np.int32), interpret=interpret)
     rh, rl = kernel.pack_keys_pallas(
@@ -449,8 +473,10 @@ def expand_pairs(lo: np.ndarray, counts: np.ndarray, *,
     auto = use_kernel is None
     use_kernel, interpret = dispatch.resolve(use_kernel, interpret,
                                              max(total, n), hot_path=True)
+    reason = ""
     if use_kernel and auto and total * max(n, 1) > _expand_work_cap():
         use_kernel = False             # ownership-test budget exceeded
+        reason = "work_cap"
     if use_kernel:
         # the kernel carries runs as int32; out-of-envelope runs would
         # silently truncate, so auto falls back and forced raises.
@@ -461,10 +487,17 @@ def expand_pairs(lo: np.ndarray, counts: np.ndarray, *,
             if not auto:
                 raise ValueError("expand kernel requires int32-range runs")
             use_kernel = False
+            reason = "int32_envelope"
     if not use_kernel:
-        if auto and not dispatch.on_tpu():
+        if auto and not reason and not dispatch.on_tpu():
+            dispatch.note_tier("join.expand_pairs", "host", "cpu_auto")
             return expand_pairs_numpy(lo, counts)
+        dispatch.note_tier("join.expand_pairs", "oracle",
+                           reason or ("below_floor" if auto
+                                      else "forced_off"))
         return _expand_pairs_oracle(lo, counts, total)
+    dispatch.note_tier("join.expand_pairs", "pallas",
+                       "auto" if auto else "forced")
     if total == 0:
         return np.empty(0, np.int64), np.empty(0, np.int64)
     starts = np.cumsum(counts) - counts
@@ -575,8 +608,13 @@ def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
                                              max(nl, nr), hot_path=True)
     if not use_kernel:
         if auto and not dispatch.on_tpu():
+            dispatch.note_tier("join.pipeline", "host", "cpu_auto")
             return _pipeline_numpy(lcs, rcs, max_total)
+        dispatch.note_tier("join.pipeline", "oracle",
+                           "below_floor" if auto else "forced_off")
         return _pipeline_oracle(lcs, rcs, max_total)
+    dispatch.note_tier("join.pipeline", "pallas",
+                       "auto" if auto else "forced")
     fns = _pipe_fns()
     _note(h2d=2)
     lh, ll = kernel.pack_keys_pallas(
@@ -595,6 +633,7 @@ def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
     rl_s = fns["take"](rl, order_d)
     if auto and nl * nr > _probe_work_cap():
         # compare budget exceeded: this stage runs as the device oracle
+        dispatch.note_tier("join.pipeline.probe", "oracle", "work_cap")
         with enable_x64():
             _, search = _oracle_fns()
             lo_j, hi_j = search(rk_d[order_d],
@@ -614,6 +653,7 @@ def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
     if total >= 1 << 31 or nr >= 1 << 31:
         # past the int32 envelope no device stage can carry the expansion;
         # finish on the host (auto would normally cap out long before this)
+        dispatch.note_tier("join.pipeline.expand", "host", "int32_envelope")
         lo_h = np.asarray(lo_d).astype(np.int64)
         ct_h = np.asarray(counts_d).astype(np.int64)
         li, pos = expand_pairs_numpy(lo_h, ct_h)
@@ -621,6 +661,7 @@ def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
     tp = _pow2_len(total)
     if auto and total * nl > _expand_work_cap():
         # ownership-test budget exceeded: searchsorted oracle, on device
+        dispatch.note_tier("join.pipeline.expand", "oracle", "work_cap")
         mp = _pow2_len(nl)
         li_d, pos_d = fns["expand"](fns["pad_to"](lo_d, n=mp, fill=0),
                                     fns["pad_to"](counts_d, n=mp, fill=0),
@@ -633,6 +674,8 @@ def _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total):
                                                  interpret=interpret)
         li_d, pos_d = li_d[:total], pos_d[:total]
     if auto and nr > _gather_resident_rows():
+        dispatch.note_tier("join.pipeline.gather", "oracle",
+                           "vmem_residency")
         ri_d = fns["take"](order_d, pos_d)     # table too big for one panel
     else:
         ri_d = kernel.gather_rows_pallas(order_d, pos_d, interpret=interpret)
@@ -663,10 +706,14 @@ def hash_join_pipeline(lcs: Sequence[np.ndarray], rcs: Sequence[np.ndarray],
     nl, nr = len(lcs[0]), len(rcs[0])
     if nl == 0 or nr == 0:
         return _EMPTY_PAIR
+    auto_mode = mode == "auto"
     if mode == "auto":
         mode = "pallas" if dispatch.on_tpu() else "numpy"
     if mode == "numpy":
+        dispatch.note_tier("join.pipeline", "host",
+                           "cpu_auto" if auto_mode else "forced")
         return _pipeline_numpy(lcs, rcs, max_total)
     if mode == "oracle":
+        dispatch.note_tier("join.pipeline", "oracle", "forced")
         return _pipeline_oracle(lcs, rcs, max_total)
     return _pipeline_pallas(lcs, rcs, use_kernel, interpret, max_total)

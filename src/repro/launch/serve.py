@@ -18,6 +18,10 @@ read/write serving. ``--stream`` swaps the experiment for the
 continuous-admission loop (``repro.stream``): an open-loop replay at
 ``--arrival-rate`` qps with writes and the migration drain in flight,
 reporting p50/p95/p99 admission→completion tails per window.
+``--trace out.json`` records the run's ``repro.obs`` spans (per-query
+plan→scan→join→federate→ship, windows, migration chunks, adaptation
+rounds) as a Perfetto-loadable Chrome trace, and ``--metrics-csv``
+dumps the metrics-registry snapshot.
 
   PYTHONPATH=src python -m repro.launch.serve --universities 5 --shards 8 \
       --experiment 1 --executor jax --migration-budget 1048576 \
@@ -48,14 +52,16 @@ def build_system(universities: int, shards: int, seed: int = 0,
                  config: AdaptConfig | None = None,
                  partitioner: str = "awapart", executor: str = "numpy",
                  migration_budget: int | None = None,
-                 replica_budget: int | None = None):
+                 replica_budget: int | None = None,
+                 trace: bool = False):
     """Load LUBM and assemble the service facade (no partition yet)."""
     ds = lubm.load(universities, seed)
     part = (HashPartitioner() if partitioner == "hash"
             else PARTITIONERS[partitioner](config))
     svc = KGService.from_dataset(ds, shards, part, executor=executor,
                                  migration_budget=migration_budget,
-                                 replica_budget=replica_budget)
+                                 replica_budget=replica_budget,
+                                 trace=trace)
     return ds, svc
 
 
@@ -265,6 +271,14 @@ def main() -> None:
                     help="open-loop arrival rate for --stream (queries/s)")
     ap.add_argument("--show-federated", action="store_true",
                     help="print a federated SPARQL rewrite example")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record repro.obs spans (per-query plan/scan/join/"
+                         "federate/ship, windows, migration chunks, "
+                         "adaptation rounds) and export a Chrome-trace JSON "
+                         "(.jsonl for JSON-lines) to PATH")
+    ap.add_argument("--metrics-csv", metavar="PATH", default=None,
+                    help="dump the service's metrics-registry snapshot "
+                         "(counters/gauges/histograms) as CSV to PATH")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -272,7 +286,8 @@ def main() -> None:
                            partitioner=args.partitioner,
                            executor=args.executor,
                            migration_budget=args.migration_budget,
-                           replica_budget=args.replica_budget)
+                           replica_budget=args.replica_budget,
+                           trace=args.trace is not None)
     print(f"loaded LUBM({args.universities}): {ds.store.n_triples} triples "
           f"({time.time()-t0:.1f}s), {svc.space.n_features} features, "
           f"{args.shards} shards, strategy={svc.partitioner.name}, "
@@ -292,6 +307,12 @@ def main() -> None:
         print("\nFederated rewrite of Q9 under the adapted partition:")
         print(rewrite.federated_sparql(q, svc.space, state, ds.dictionary,
                                        replicas=svc.kg.replicas))
+    if args.trace:
+        n = svc.tracer().export(args.trace)
+        print(f"[obs] wrote {n} trace events to {args.trace}")
+    if args.metrics_csv:
+        svc.metrics.to_csv(args.metrics_csv)
+        print(f"[obs] wrote metrics snapshot to {args.metrics_csv}")
 
 
 if __name__ == "__main__":

@@ -127,6 +127,12 @@ class MigrationSession:
         self.applied += 1
         self.bytes_applied += chunk.bytes
         self.epochs.append(self.kg.epoch)
+        m = getattr(self.kg, "metrics", None)
+        if m is not None:           # repro.obs: drain progress counters
+            m.counter("migrate.chunks").inc()
+            m.counter("migrate.bytes").inc(chunk.bytes)
+            m.counter("migrate.moved_triples").inc(chunk.n_triples)
+            m.gauge("migrate.progress").set(self.progress())
         if self.done:
             # compare the target's universe only: live writes during the
             # drain may have grown the feature universe (repro.write), and

@@ -296,10 +296,17 @@ class NumpyExecutor:
                 break
         stats.wall_s = time.perf_counter() - t0
         stats.rows = _table_len(table)
+        m = getattr(kg, "metrics", None)
+        if m is not None:          # repro.obs: backend execution counters
+            m.counter("executor.queries").inc()
+            m.histogram("executor.wall_s").observe(stats.wall_s)
         return table or {}, stats
 
     def run_batch(self, plans: Sequence[qplan.QueryPlan], kg,
                   ) -> List[Tuple[Bindings, ExecStats]]:
+        m = getattr(kg, "metrics", None)
+        if m is not None:
+            m.counter("executor.batches").inc()
         return [self.run(p, kg) for p in plans]
 
 
@@ -500,6 +507,14 @@ class JaxExecutor:
             acct = (time.perf_counter() - t0) / len(plans)
             for _, stats in results:
                 stats.wall_s += acct
+        m = getattr(kg, "metrics", None)
+        if m is not None:          # repro.obs: backend execution counters
+            m.counter("executor.batches").inc()
+            m.counter("executor.queries").inc(len(plans))
+            m.counter("executor.match_dedup_hits").inc(
+                len(executed) - len(match_cache))
+            for _, stats in results:
+                m.histogram("executor.wall_s").observe(stats.wall_s)
         return results
 
 

@@ -172,6 +172,10 @@ class StreamService:
         if not self._queue:
             return 0
         t0 = max(self.now, self._queue[0].arrival_s)
+        # sync the span tracer's virtual-clock cursor to the admission
+        # clock: spans emitted by the writes/chunks/window below lay out
+        # from this window's start (monotone — never rewinds over spans)
+        svc._tracer.advance_to(t0)
         idle = t0 - self.now
         avail = (self._credit + idle) if self.pipeline else 0.0
         overhead = 0.0
@@ -216,6 +220,7 @@ class StreamService:
 
         if not window:       # mutation-only pump: charge the unhidden stall
             self.now = t0 + max(0.0, overhead - avail)
+            svc._tracer.advance_to(self.now)
             if self.pipeline:
                 self._credit = max(0.0, avail - overhead)
             return 0
@@ -241,6 +246,7 @@ class StreamService:
 
         # 5. record + complete
         miss_seqs = {window[i].seq for i in miss}
+        m = svc.metrics
         for ev, (bindings, stats) in zip(window, results):
             rec = QueryLatency(
                 seq=ev.seq, name=ev.query.name, window=self.n_windows,
@@ -248,6 +254,8 @@ class StreamService:
                 start_s=start, finish_s=finish, epoch=kg.epoch,
                 cached=ev.seq not in miss_seqs)
             self.recorder.record(rec)
+            m.histogram("query.queue_s").observe(rec.queue_s)
+            m.histogram("query.latency_s").observe(rec.latency_s)
             self._done.append(StreamResult(ev.seq, ev.query, bindings,
                                            stats, rec))
         self.window_log.append(dict(
@@ -255,8 +263,18 @@ class StreamService:
             n=len(window), n_miss=len(miss), exec_s=exec_s,
             overhead_s=overhead, hidden_s=hidden, writes=wrote,
             chunk_bytes=chunk_bytes, epoch=kg.epoch))
+        # the queue-vs-execute split: how much window time was spent
+        # waiting (stalls that failed to hide) vs. executing
+        m.counter("stream.windows").inc()
+        m.counter("stream.queries").inc(len(window))
+        m.counter("stream.exec_s_total").inc(exec_s)
+        m.counter("stream.queue_s_total").inc(
+            sum(start - ev.arrival_s for ev in window))
+        m.counter("stream.overhead_s_total").inc(overhead)
+        m.counter("stream.hidden_s_total").inc(hidden)
         self.n_windows += 1
         self.now = finish
+        svc._tracer.advance_to(finish)
         # double buffering: the next window's stalls can hide behind this
         # window's execution — and behind nothing else
         self._credit = exec_s if self.pipeline else 0.0

@@ -59,7 +59,12 @@ def percentile_summary(values: Sequence[float]) -> Dict[str, float]:
 
 
 class LatencyRecorder:
-    """Accumulates :class:`QueryLatency` rows and aggregates their tails."""
+    """Accumulates :class:`QueryLatency` rows and aggregates their tails.
+
+    Every aggregate carries a nested ``"queue"`` percentile block over the
+    rows' ``queue_s`` (time spent admitted-but-unstarted) beside the
+    end-to-end latency percentiles — queueing pathologies would otherwise
+    hide inside the admission→completion p99."""
 
     def __init__(self) -> None:
         self.records: List[QueryLatency] = []
@@ -71,19 +76,33 @@ class LatencyRecorder:
         return len(self.records)
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def empty_summary() -> Dict[str, object]:
+        """The well-formed all-zero :meth:`summary` block — what
+        ``KGService.stats()`` reports before any stream has recorded."""
+        return LatencyRecorder._summarize([])
+
+    @staticmethod
+    def _summarize(recs: Sequence[QueryLatency]) -> Dict[str, object]:
+        out: Dict[str, object] = percentile_summary(
+            [r.latency_s for r in recs])
+        out["queue"] = percentile_summary([r.queue_s for r in recs])
+        return out
+
     def latencies(self) -> np.ndarray:
         return np.array([r.latency_s for r in self.records],
                         dtype=np.float64)
 
-    def summary(self) -> Dict[str, float]:
-        """Overall admission→completion percentile summary (seconds)."""
-        return percentile_summary([r.latency_s for r in self.records])
+    def summary(self) -> Dict[str, object]:
+        """Overall admission→completion percentile summary (seconds),
+        with the queue-time percentiles under ``"queue"``."""
+        return self._summarize(self.records)
 
-    def _grouped(self, key) -> Dict[int, Dict[str, float]]:
-        groups: Dict[int, List[float]] = {}
+    def _grouped(self, key) -> Dict[int, Dict[str, object]]:
+        groups: Dict[int, List[QueryLatency]] = {}
         for r in self.records:
-            groups.setdefault(key(r), []).append(r.latency_s)
-        return {k: percentile_summary(v) for k, v in sorted(groups.items())}
+            groups.setdefault(key(r), []).append(r)
+        return {k: self._summarize(v) for k, v in sorted(groups.items())}
 
     def per_window(self) -> Dict[int, Dict[str, float]]:
         """Percentile summary per serving window."""
@@ -108,7 +127,12 @@ class LatencyRecorder:
                        p95_ms=round(s["p95"] * 1e3, 3),
                        p99_ms=round(s["p99"] * 1e3, 3),
                        mean_ms=round(s["mean"] * 1e3, 3),
-                       max_ms=round(s["max"] * 1e3, 3))
+                       max_ms=round(s["max"] * 1e3, 3),
+                       # queue-time tails ride after the latency columns
+                       # (existing consumers index by the header prefix)
+                       queue_p50_ms=round(s["queue"]["p50"] * 1e3, 3),
+                       queue_p95_ms=round(s["queue"]["p95"] * 1e3, 3),
+                       queue_p99_ms=round(s["queue"]["p99"] * 1e3, 3))
             rows.append(row)
         return rows
 

@@ -422,6 +422,15 @@ def apply_batch(kg, batch: WriteBatch) -> WriteReport:
     kg._invalidate_caches()
     kg._profiles.clear()       # profiles are data-dependent: global row ids
 
+    m = getattr(kg, "metrics", None)
+    if m is not None:          # repro.obs: write-path traffic counters
+        m.counter("write.batches").inc()
+        m.counter("write.rows_inserted").inc(len(ins_rows))
+        m.counter("write.rows_deleted").inc(len(del_rows))
+        m.counter("write.rows_redundant").inc(n_redundant)
+        m.counter("write.fanout_copies").inc(fanout_copies)
+        m.counter("write.fanout_bytes").inc(fanout_bytes)
+
     return WriteReport(
         n_inserted=len(ins_rows), n_deleted=len(del_rows),
         n_redundant=n_redundant, touched_shards=touched_shards,
